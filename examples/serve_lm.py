@@ -1,0 +1,46 @@
+"""Batched serving with BLMAC CSD-P quantized weights.
+
+Loads (or initializes) a model, quantizes every linear weight to its P
+most-significant CSD pulses — the paper's variable-precision dot product
+as a deployment feature — and compares generations and weight-storage cost
+against the bf16 baseline.
+
+    PYTHONPATH=src python examples/serve_lm.py --planes 4
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.serve_quant import quantize_param_tree
+from repro.nn import init_params, model_decls
+from repro.serving import ServeEngine
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-3b")
+ap.add_argument("--planes", type=int, default=4)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--new-tokens", type=int, default=12)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+params = init_params(model_decls(cfg), jax.random.key(0))
+prompts = np.random.default_rng(0).integers(
+    0, cfg.vocab_size, (args.batch, 16)).astype(np.int32)
+
+base = ServeEngine(cfg, params, cache_len=128)
+t0 = time.time()
+out_base = np.asarray(base.generate(prompts, args.new_tokens))
+print(f"bf16 baseline: {time.time()-t0:.2f}s  tokens:\n{out_base[:2]}")
+
+qparams, stats = quantize_param_tree(params, args.planes)
+print(f"CSD-{args.planes}: {stats['n_quantized']} matrices quantized, "
+      f"mean rel err {stats['mean_rel_err']:.4f}, "
+      f"{stats['bits_per_weight']:.1f} bits/weight stored "
+      f"({stats['bits_per_weight_achievable']:.1f} achievable) vs 16 bf16")
+quant = ServeEngine(cfg, qparams, cache_len=128)
+out_q = np.asarray(quant.generate(prompts, args.new_tokens))
+agree = (out_base == out_q).mean()
+print(f"greedy-token agreement vs bf16: {100*agree:.1f}%")

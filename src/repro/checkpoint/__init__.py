@@ -1,0 +1,4 @@
+from .manager import (all_steps, latest_step, restore_checkpoint,
+                      save_checkpoint)
+
+__all__ = ["all_steps", "latest_step", "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,31 @@
+"""Architecture registry: one module per assigned architecture."""
+from . import (
+    deepseek_coder_33b,
+    deepseek_v3_671b,
+    gemma2_27b,
+    internvl2_76b,
+    mamba2_370m,
+    mixtral_8x22b,
+    musicgen_large,
+    qwen2_5_3b,
+    recurrentgemma_2b,
+    starcoder2_3b,
+)
+from .base import (
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    all_configs,
+    cells_for,
+    get_config,
+    input_specs,
+)
+from .fir127 import FirConfig
+
+ALL = list(all_configs())
+
+__all__ = [
+    "ALL", "LONG_CONTEXT_ARCHS", "SHAPES", "ModelConfig", "ShapeSpec",
+    "FirConfig", "all_configs", "cells_for", "get_config", "input_specs",
+]

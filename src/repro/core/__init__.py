@@ -1,0 +1,60 @@
+"""BLMAC core: CSD codec, RLE weight programs, quantizers, cost model, and
+the cycle-accurate dot-product machine (paper §2, §2.4, §3.2, §3.3, §4)."""
+from .csd import (
+    csd_digits,
+    csd_decode,
+    csd_truncate,
+    max_pulses,
+    ntrits_table,
+    num_pulses,
+    pack_trits,
+    unpack_trits,
+)
+from .costmodel import (
+    adds_per_coeff,
+    adds_per_tap,
+    classical_equivalent_adds,
+    fir_blmac_additions,
+    fir_blmac_additions_batch,
+    machine_cycles,
+)
+from .machine import FirBlmacMachine, MachineResult, MachineSpec
+from .quantize import (
+    PlaneQuantized,
+    csd_plane_quantize,
+    dequantize,
+    plane_dequantize,
+    po2_quantize,
+    po2_quantize_batch,
+)
+from .rle import EOR, RleStream, code_count, decode_codes, encode_digits
+
+__all__ = [
+    "csd_digits",
+    "csd_decode",
+    "csd_truncate",
+    "max_pulses",
+    "ntrits_table",
+    "num_pulses",
+    "pack_trits",
+    "unpack_trits",
+    "adds_per_coeff",
+    "adds_per_tap",
+    "classical_equivalent_adds",
+    "fir_blmac_additions",
+    "fir_blmac_additions_batch",
+    "machine_cycles",
+    "FirBlmacMachine",
+    "MachineResult",
+    "MachineSpec",
+    "PlaneQuantized",
+    "csd_plane_quantize",
+    "dequantize",
+    "plane_dequantize",
+    "po2_quantize",
+    "EOR",
+    "RleStream",
+    "code_count",
+    "decode_codes",
+    "encode_digits",
+]

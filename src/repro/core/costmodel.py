@@ -1,0 +1,68 @@
+"""The paper's cost model (§3.3): additions needed to apply a type-I FIR
+filter with a BLMAC, with the symmetric pre-add optimization of Eq. 3.
+
+    tot = N/2                              (pre-adds of symmetric samples)
+        + Σ_{j<N/2+1} ntrits[|w_j|]        (BLMAC pulses)
+
+plus the comparison baselines the paper uses.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .csd import csd_digits, num_pulses
+from .rle import code_count
+
+__all__ = [
+    "fir_blmac_additions",
+    "fir_blmac_additions_batch",
+    "adds_per_coeff",
+    "adds_per_tap",
+    "classical_equivalent_adds",
+    "machine_cycles",
+]
+
+
+def _half(wq: np.ndarray) -> np.ndarray:
+    """First N//2 + 1 coefficients of a type-I (odd, symmetric) filter."""
+    n = wq.shape[-1]
+    if n % 2 == 0:
+        raise ValueError("type-I FIR filters have an odd number of taps")
+    return wq[..., : n // 2 + 1]
+
+
+def fir_blmac_additions(wq: np.ndarray) -> int:
+    """Total additions to apply one quantized N-tap type-I filter (Eq. 3)."""
+    n = wq.shape[-1]
+    return int(n // 2 + num_pulses(np.abs(_half(wq))).sum())
+
+
+def fir_blmac_additions_batch(wq: np.ndarray) -> np.ndarray:
+    """Vectorized over a bank: ``wq`` is (n_filters, n_taps) int."""
+    n = wq.shape[-1]
+    return n // 2 + num_pulses(np.abs(_half(wq))).sum(axis=-1)
+
+
+def adds_per_coeff(total_adds, n_taps: int):
+    """(B_N − N/2) / (N/2 + 1) — comparable to Tab. 3's per-weight averages."""
+    return (np.asarray(total_adds, np.float64) - n_taps // 2) / (n_taps // 2 + 1)
+
+
+def adds_per_tap(total_adds, n_taps: int):
+    return np.asarray(total_adds, np.float64) / n_taps
+
+
+def classical_equivalent_adds(n_taps: int, mult_cost_adds: int = 15) -> int:
+    """The paper's apples-to-apples baseline: symmetric classical algorithm
+    = (N/2+1) multiplications (@ ``mult_cost_adds`` adds each for 16-bit)
+    + N−1 additions."""
+    return mult_cost_adds * (n_taps // 2 + 1) + n_taps - 1
+
+
+def machine_cycles(
+    wq: np.ndarray, n_layers: int = 16, overhead: int = 0
+) -> int:
+    """Clock cycles of the §4 dot-product machine for one output sample:
+    one cycle per RLE code (pulse or EOR) + fixed per-sample overhead."""
+    digits = csd_digits(_half(wq), n_digits=n_layers)
+    return code_count(digits) + overhead

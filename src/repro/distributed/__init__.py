@@ -1,0 +1,6 @@
+from .sharding import (batch_shardings, data_axes, data_size, make_rules,
+                       tree_shardings)
+from .collectives import compressed_psum, compressed_psum_tree
+
+__all__ = ["batch_shardings", "data_axes", "data_size", "make_rules",
+           "tree_shardings", "compressed_psum", "compressed_psum_tree"]

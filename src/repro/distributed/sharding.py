@@ -1,0 +1,148 @@
+"""Logical-axis → mesh-axis rules: the single place the parallelism layout
+is decided.
+
+Parallelism map (DESIGN.md §5):
+  DP    batch over (pod, data)
+  FSDP  the d_model side of every weight over data  (ZeRO-3-style; XLA
+        inserts the per-layer all-gathers inside the scan)
+  TP    heads / ff / vocab / experts over model (Megatron-style)
+  EP    experts over model
+  SP    decode KV/latent caches over model (flash-decoding style), and
+        over (data, model) when the decode batch cannot fill the data axis
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_size(mesh: Mesh) -> int:
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))
+
+
+def make_rules(mesh: Mesh, kind: str = "train",
+               global_batch: int | None = None) -> dict[str, Any]:
+    """Logical-axis rules for one execution cell."""
+    daxes: Any = data_axes(mesh)
+    if len(daxes) == 1:
+        daxes = daxes[0]
+    rules: dict[str, Any] = {
+        "batch": daxes,
+        "seq": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "heads_flat": "model",
+        "head_dim": None,
+        "ff": "model",
+        "experts": "model",
+        "expert_ff": None,
+        "d_model": "data",  # FSDP
+        "state": None,
+        "layers": None,
+        "cache_seq": None,
+    }
+    if kind == "decode":
+        rules["cache_seq"] = "model"
+        if global_batch is not None and global_batch < data_size(mesh):
+            # batch can't fill the data axis (long-context, batch=1):
+            # shard the cache sequence across everything instead
+            rules["batch"] = None
+            rules["cache_seq"] = (
+                ("pod", "data", "model") if "pod" in mesh.axis_names
+                else ("data", "model")
+            )
+    if kind in ("prefill", "decode"):
+        # FSDP is a *training* memory trick: at inference, weights are
+        # read-only — replicating them over `data` removes a full-model
+        # all-gather per step (§Perf iteration A1: 133 GiB/step on
+        # deepseek-coder-33b decode_32k)
+        rules["d_model"] = None
+    return rules
+
+
+def named_sharding(mesh: Mesh, spec: PartitionSpec) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def sanitize_spec(mesh: Mesh, spec: PartitionSpec, shape: tuple[int, ...]) -> PartitionSpec:
+    """Drop mesh axes that do not divide their dim: jit *input* shardings
+    must be even (GSPMD pads only intermediates).  E.g. kv_heads=2 cannot
+    shard over model=16 → replicated (the realistic TP choice anyway)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return PartitionSpec(*out)
+
+
+def sanitized_shardings(mesh: Mesh, pspec_tree, shape_tree,
+                        tp_fallback_axis: str | None = None):
+    """NamedShardings with divisibility enforcement, leaf-wise.
+
+    ``tp_fallback_axis``: when a weight ends up with NO use of that mesh
+    axis (its TP dim wasn't divisible — e.g. 56 heads on a 16-way axis),
+    shard its largest divisible dim instead.  For inference this is the
+    row-parallel layout: the contraction dim is sharded, each device reads
+    1/TP of the weight and contributes a partial sum (§Perf iteration A2).
+    """
+    flat_s, treedef = jax.tree_util.tree_flatten(
+        pspec_tree, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    flat_shapes = treedef.flatten_up_to(shape_tree)
+    out = []
+    for s, sh in zip(flat_s, flat_shapes):
+        shape = tuple(sh.shape)
+        spec = sanitize_spec(mesh, s, shape)
+        if tp_fallback_axis is not None:
+            used = {a for e in spec if e
+                    for a in (e if isinstance(e, tuple) else (e,))}
+            if tp_fallback_axis not in used and len(shape) >= 2:
+                size = mesh.shape[tp_fallback_axis]
+                cands = [(dim, i) for i, (dim, e) in
+                         enumerate(zip(shape, spec))
+                         if e is None and dim % size == 0 and dim >= size]
+                if cands:
+                    _, idx = max(cands)
+                    entries = list(spec)
+                    entries[idx] = tp_fallback_axis
+                    spec = PartitionSpec(*entries)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_shardings(mesh: Mesh, pspecs) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, PartitionSpec),
+    )
+
+
+def batch_pspec(mesh: Mesh, rules: dict, ndim: int) -> PartitionSpec:
+    """Sharding for a (B, S, ...) input batch leaf."""
+    return PartitionSpec(rules.get("batch"), *([None] * (ndim - 1)))
+
+
+def batch_shardings(mesh: Mesh, rules: dict, batch_tree) -> Any:
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(
+            mesh, batch_pspec(mesh, rules, len(leaf.shape))
+        ),
+        batch_tree,
+    )

@@ -1,0 +1,22 @@
+"""FIR filter substrate: vectorized windowed-sinc design (scipy-compatible),
+the paper's 1.98M-filter sweep, and exact reference application paths."""
+from .apply import fir_bit_layers, fir_direct, fir_symmetric, sliding_windows
+from .fir import FilterKind, bands_for, design_bank, firwin_batch, window_values
+from .sweep import TAPS_RANGE, SweepSpec, iter_sweep, sweep_bank, sweep_specs
+
+__all__ = [
+    "fir_bit_layers",
+    "fir_direct",
+    "fir_symmetric",
+    "sliding_windows",
+    "FilterKind",
+    "bands_for",
+    "design_bank",
+    "firwin_batch",
+    "window_values",
+    "TAPS_RANGE",
+    "SweepSpec",
+    "iter_sweep",
+    "sweep_bank",
+    "sweep_specs",
+]

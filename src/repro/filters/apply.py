@@ -1,0 +1,80 @@
+"""Reference FIR application paths (numpy, exact integer arithmetic).
+
+Three algorithms, all computing y[t] = Σ_j w[j] · x[t+j] for a length-N
+window (the machine's orientation; flip w for convolution):
+
+  * ``fir_direct``      — classical MACs,
+  * ``fir_symmetric``   — Eq. 3 pre-add + half-length dot,
+  * ``fir_bit_layers``  — Eq. 2: Horner over CSD bit layers, no multiplies
+                          (the algorithm the Pallas kernel implements).
+
+All three must agree bit-for-bit on integer inputs (property-tested).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.csd import csd_digits
+
+__all__ = ["sliding_windows", "fir_direct", "fir_symmetric", "fir_bit_layers"]
+
+
+def sliding_windows(x: np.ndarray, n: int) -> np.ndarray:
+    """(T,) → (T-n+1, n) view of ascending windows."""
+    return np.lib.stride_tricks.sliding_window_view(x, n)
+
+
+def fir_direct(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, np.int64)
+    w = np.asarray(w, np.int64)
+    return sliding_windows(x, w.size) @ w
+
+
+def fir_symmetric(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Eq. 3: fold the symmetric window pairs first (N/2 adds), then an
+    (N/2+1)-point dot product."""
+    x = np.asarray(x, np.int64)
+    w = np.asarray(w, np.int64)
+    n = w.size
+    if n % 2 == 0 or not np.array_equal(w, w[::-1]):
+        raise ValueError("fir_symmetric needs an odd symmetric (type-I) filter")
+    half = n // 2
+    win = sliding_windows(x, n)
+    folded = win[:, :half] + win[:, n - 1 : half:-1]  # (T', N/2)
+    centre = win[:, half]
+    return folded @ w[:half] + centre * w[half]
+
+
+def fir_bit_layers(x: np.ndarray, w: np.ndarray, symmetric: bool = True) -> np.ndarray:
+    """Eq. 2, MSB-first Horner over CSD bit layers: acc ← 2·acc + Σ ±x.
+
+    One vectorized add per *pulse* across all outputs — the numpy analogue
+    of both the FPGA machine (pulse-serial over one sample) and the Pallas
+    kernel (pulse-serial over a 128-lane tile).
+    """
+    x = np.asarray(x, np.int64)
+    w = np.asarray(w, np.int64)
+    n = w.size
+    if symmetric:
+        if n % 2 == 0 or not np.array_equal(w, w[::-1]):
+            raise ValueError("symmetric path needs a type-I filter")
+        half = n // 2
+        win = sliding_windows(x, n)
+        data = np.concatenate(
+            [win[:, :half] + win[:, n - 1 : half:-1], win[:, half:half + 1]], axis=1
+        )  # (T', N/2+1)
+        coeffs = w[: half + 1]
+    else:
+        data = sliding_windows(x, n)
+        coeffs = w
+    digits = csd_digits(coeffs)  # (M, L) LSB-first
+    acc = np.zeros(data.shape[0], np.int64)
+    for layer in range(digits.shape[1] - 1, -1, -1):  # MSB → LSB
+        acc <<= 1
+        d = digits[:, layer]
+        for j in np.nonzero(d)[0]:  # one vector add per pulse
+            if d[j] > 0:
+                acc += data[:, j]
+            else:
+                acc -= data[:, j]
+    return acc

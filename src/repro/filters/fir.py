@@ -1,0 +1,92 @@
+"""Windowed-sinc FIR design, vectorized over whole filter banks.
+
+``firwin_batch`` reproduces ``scipy.signal.firwin`` (windowed-sinc with
+passband-centre scaling) but designs thousands of filters in one numpy
+pass — the paper's sweep is 1,980,000 filters (§3.1) and scipy's one-at-a-
+time loop would take ~30 CPU-minutes; this takes seconds.  Cross-validated
+against scipy to 1e-12 in ``tests/test_filters.py``.
+
+Normalized frequencies follow scipy's convention: Nyquist = 1.0.
+"""
+from __future__ import annotations
+
+from typing import Literal, Sequence
+
+import numpy as np
+
+FilterKind = Literal["lowpass", "highpass", "bandpass", "bandstop"]
+
+__all__ = ["FilterKind", "bands_for", "window_values", "firwin_batch", "design_bank"]
+
+
+def bands_for(kind: FilterKind, cutoff: float | tuple[float, float]) -> np.ndarray:
+    """Passband edges [(left, right), ...] for one filter, scipy-style."""
+    if kind == "lowpass":
+        return np.array([[0.0, float(cutoff)]])
+    if kind == "highpass":
+        return np.array([[float(cutoff), 1.0]])
+    f1, f2 = cutoff  # type: ignore[misc]
+    if kind == "bandpass":
+        return np.array([[float(f1), float(f2)]])
+    if kind == "bandstop":
+        return np.array([[0.0, float(f1)], [float(f2), 1.0]])
+    raise ValueError(f"unknown filter kind {kind!r}")
+
+
+def window_values(numtaps: int, window: str | tuple = "hamming") -> np.ndarray:
+    """Symmetric window samples; supports the paper's two windows."""
+    if window == "hamming":
+        return np.hamming(numtaps)
+    if isinstance(window, tuple) and window[0] == "kaiser":
+        return np.kaiser(numtaps, float(window[1]))
+    raise ValueError(f"unsupported window {window!r}")
+
+
+def firwin_batch(
+    numtaps: int,
+    bands: Sequence[np.ndarray],
+    window: str | tuple = "hamming",
+    scale: bool = True,
+) -> np.ndarray:
+    """Design ``len(bands)`` filters of ``numtaps`` taps at once.
+
+    ``bands[i]`` is an (n_bands_i, 2) array of passband edges.  Returns
+    float64 (n_filters, numtaps).  Matches scipy.signal.firwin bit-for-bit
+    up to float roundoff (same summed-sinc construction, same passband-
+    centre scaling rule).
+    """
+    if numtaps % 2 == 0:
+        raise ValueError("type-I FIR filters need an odd tap count")
+    nf = len(bands)
+    m = np.arange(numtaps, dtype=np.float64) - (numtaps - 1) / 2.0  # (T,)
+    # Flatten all bands with an owner index so one vector pass handles
+    # filters with different band counts (bandstop has two).
+    owners = np.concatenate(
+        [np.full(len(b), i, dtype=np.int64) for i, b in enumerate(bands)]
+    )
+    edges = np.concatenate([np.asarray(b, np.float64) for b in bands], axis=0)
+    if np.any(edges[:, 0] >= edges[:, 1]) or np.any(edges < 0) or np.any(edges > 1):
+        raise ValueError("band edges must satisfy 0 <= left < right <= 1")
+    left, right = edges[:, 0:1], edges[:, 1:2]  # (B, 1)
+    contrib = right * np.sinc(right * m) - left * np.sinc(left * m)  # (B, T)
+    h = np.zeros((nf, numtaps), np.float64)
+    np.add.at(h, owners, contrib)
+    h *= window_values(numtaps, window)
+    if scale:
+        # scipy: normalize unit gain at the centre of the *first* band
+        first = np.searchsorted(owners, np.arange(nf))
+        l0, r0 = edges[first, 0], edges[first, 1]
+        scale_f = np.where(l0 == 0.0, 0.0, np.where(r0 == 1.0, 1.0, (l0 + r0) / 2))
+        c = np.cos(np.pi * m[None, :] * scale_f[:, None])  # (F, T)
+        s = np.einsum("ft,ft->f", h, c)
+        h /= s[:, None]
+    return h
+
+
+def design_bank(
+    numtaps: int,
+    specs: Sequence[tuple[FilterKind, float | tuple[float, float]]],
+    window: str | tuple = "hamming",
+) -> np.ndarray:
+    """Convenience: design a heterogeneous bank from (kind, cutoff) specs."""
+    return firwin_batch(numtaps, [bands_for(k, c) for k, c in specs], window)

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the BLMAC hot spots, with jnp oracles.
+
+  blmac_fir     — pulse-specialized bit-layer FIR (the paper's machine,
+                  lane-parallelized; exact int32)
+  blmac_matmul  — CSD-P pulse-code quantized matmul (serving-side weight
+                  decompression; attacks the decode memory roofline)
+"""
+from .ops import (
+    blmac_fir,
+    default_interpret,
+    pulse_dequantize,
+    pulse_matmul_op,
+    pulse_quantize,
+)
+from . import ref
+
+__all__ = [
+    "blmac_fir",
+    "default_interpret",
+    "pulse_dequantize",
+    "pulse_matmul_op",
+    "pulse_quantize",
+    "ref",
+]

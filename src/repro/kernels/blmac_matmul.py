@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: pulse-code (CSD-P) quantized matmul.
+
+The serving-side adaptation of BLMAC (DESIGN.md §2.2): each weight is
+stored as its P most-significant CSD pulses — `w ≈ Σ_p s_p·2^(e_g−14+r_p)`
+with a per-group (32 along K) exponent `e_g`.  The kernel streams the
+packed pulse codes from HBM, reconstructs the bf16/f32 weight tile in
+VMEM with shifts and selects (no multiplier needed for the reconstruction)
+and runs one MXU matmul per tile.  HBM weight traffic is `P` bytes/weight
+as implemented (byte-aligned codes; 6P bits achievable with bit packing —
+both numbers are carried in the roofline analysis) versus 2 bytes for
+bf16 — the lever used on the memory-bound decode cells in §Perf.
+
+Quantization quality versus plain round-to-nearest int is benchmarked in
+`benchmarks/pulse_quant.py`; P=1 is exact power-of-two weights (the
+paper's shift-only limit), P≥4 is ≈ lossless for FIR banks (avg 3.0–3.8
+pulses per coefficient, Figs. 3–4).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..core.csd import csd_digits, csd_truncate
+
+GROUP = 32
+NULL_POS = 15
+
+
+# ---------------------------------------------------------------------------
+# host-side quantizer
+# ---------------------------------------------------------------------------
+
+def pulse_quantize(
+    w: np.ndarray, planes: int, group: int = GROUP
+) -> tuple[np.ndarray, np.ndarray]:
+    """Quantize float (K, N) weights to P pulse codes + group exponents.
+
+    Returns ``codes`` uint8 (P, K, N) [bit7 valid, bit6 sign, bits3..0
+    pos] and ``group_exp`` int8 (K // group, N).
+    """
+    w = np.asarray(w, np.float64)
+    k_dim, n_dim = w.shape
+    if k_dim % group:
+        raise ValueError(f"K={k_dim} not a multiple of group={group}")
+    gmax = np.abs(w).reshape(k_dim // group, group, n_dim).max(axis=1)
+    safe = np.where(gmax == 0.0, 1.0, gmax)
+    e = np.ceil(np.log2(safe)).astype(np.int64)  # maxabs ≤ 2**e
+    e = np.where(gmax == 0.0, -128, e)
+    scale = np.exp2((e - 14).astype(np.float64))  # q ≤ 2**14
+    q = np.rint(w / np.repeat(scale, group, axis=0)).astype(np.int64)
+    q = np.where(np.repeat(gmax, group, axis=0) == 0.0, 0, q)
+    q = csd_truncate(q, planes, n_digits=16)
+    digits = csd_digits(q, n_digits=16)  # (K, N, 16)
+    codes = np.zeros((planes, k_dim, n_dim), np.uint8)
+    # assign pulses MSB-first into the P slots
+    slot = np.zeros((k_dim, n_dim), np.int64)
+    for pos in range(15, -1, -1):
+        d = digits[:, :, pos]
+        sel = d != 0
+        if not sel.any():
+            continue
+        p_idx = slot[sel]
+        assert (p_idx < planes).all(), "csd_truncate must bound pulse count"
+        codes[p_idx, *np.nonzero(sel)] = (
+            0x80 | (np.where(d[sel] < 0, 0x40, 0)) | pos
+        ).astype(np.uint8)
+        slot[sel] += 1
+    # unused slots: valid=0, pos=NULL
+    empty = codes == 0
+    codes[empty] = NULL_POS
+    return codes, np.clip(e, -127, 127).astype(np.int8)
+
+
+def pulse_dequantize(codes: np.ndarray, group_exp: np.ndarray,
+                     group: int = GROUP) -> np.ndarray:
+    """Numpy decode (host oracle)."""
+    planes, k_dim, n_dim = codes.shape
+    valid = (codes >> 7) & 1
+    sign = np.where((codes >> 6) & 1 == 1, -1.0, 1.0)
+    pos = (codes & 0x0F).astype(np.int64)
+    e = np.repeat(group_exp.astype(np.int64), group, axis=0)
+    mag = np.exp2((e[None] - 14 + pos).astype(np.float64))
+    return (valid * sign * mag).sum(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# kernel
+# ---------------------------------------------------------------------------
+
+def _pulse_matmul_kernel(x_ref, codes_ref, exp_ref, out_ref, *,
+                         planes: int, group: int, bk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    codes = codes_ref[...]  # (P, BK, BN) uint8
+    e = exp_ref[...].astype(jnp.int32)  # (BK//group, BN)
+    e = jnp.repeat(e, group, axis=0)  # (BK, BN)
+    w = jnp.zeros(codes.shape[1:], jnp.float32)
+    for p in range(planes):  # VMEM reconstruction: select + exp2, no mults
+        c = codes[p].astype(jnp.int32)
+        valid = (c >> 7) & 1
+        sgn = jnp.where((c >> 6) & 1 == 1, -1.0, 1.0)
+        pos = c & 0x0F
+        mag = jnp.exp2((e - 14 + pos).astype(jnp.float32))
+        w = w + jnp.where(valid == 1, sgn * mag, 0.0)
+    x = x_ref[...].astype(jnp.float32)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("planes", "group", "bm", "bk", "bn", "interpret"),
+)
+def pulse_matmul(
+    x: jnp.ndarray,  # (M, K)
+    codes: jnp.ndarray,  # (P, K, N) uint8
+    group_exp: jnp.ndarray,  # (K//group, N) int8
+    planes: int,
+    group: int = GROUP,
+    bm: int = 128,
+    bk: int = 512,
+    bn: int = 256,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    m, k_dim = x.shape
+    _, _, n_dim = codes.shape
+    bm = min(bm, m)
+    bk = min(bk, k_dim)
+    bn = min(bn, n_dim)
+    if m % bm or k_dim % bk or n_dim % bn or bk % group:
+        raise ValueError(f"blocks must tile the operands: {(m, k_dim, n_dim)}"
+                         f" vs {(bm, bk, bn)}, group={group}")
+    kern = functools.partial(
+        _pulse_matmul_kernel, planes=planes, group=group, bk=bk
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n_dim // bn, k_dim // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((planes, bk, bn), lambda i, j, k: (0, k, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n_dim), jnp.float32),
+        interpret=interpret,
+    )(x, codes, group_exp)

@@ -1,0 +1,86 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On non-TPU backends (this container) the kernels run under
+``interpret=True`` — the kernel body executes as traced jnp on CPU, which
+is the validation mode demanded by the deliverables.  On TPU the same
+`pallas_call` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blmac_fir import (
+    blmac_fir_dynamic,
+    blmac_fir_specialized,
+    pulses_msb_first,
+)
+from .blmac_matmul import (
+    GROUP,
+    pulse_dequantize,
+    pulse_matmul,
+    pulse_quantize,
+)
+from ..core.csd import csd_digits
+
+__all__ = [
+    "blmac_fir",
+    "pulse_quantize",
+    "pulse_dequantize",
+    "pulse_matmul_op",
+    "default_interpret",
+]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def blmac_fir(
+    x: jnp.ndarray,
+    qcoeffs: np.ndarray,
+    specialize: bool = True,
+    tile: int = 1024,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Apply a quantized symmetric type-I FIR filter with the BLMAC kernel.
+
+    ``qcoeffs`` is host-side (static) int data — reprogramming the filter
+    recompiles, exactly as the FPGA machine reloads its weight memory.
+    Returns int32 (len(x) - taps + 1,).
+    """
+    qcoeffs = np.asarray(qcoeffs, np.int64)
+    taps = int(qcoeffs.shape[0])
+    if taps % 2 == 0 or not np.array_equal(qcoeffs, qcoeffs[::-1]):
+        raise ValueError("blmac_fir needs an odd symmetric (type-I) filter")
+    if interpret is None:
+        interpret = default_interpret()
+    if specialize:
+        pulses = pulses_msb_first(qcoeffs)
+        return blmac_fir_specialized(x, pulses, taps, tile, interpret)
+    half = taps // 2 + 1
+    digits = csd_digits(qcoeffs[:half], n_digits=17)  # (M, L)
+    m_pad = -(-half // 128) * 128
+    trits = np.zeros((digits.shape[1], m_pad), np.int8)
+    trits[:, :half] = digits.T
+    return blmac_fir_dynamic(
+        x, jnp.asarray(trits), taps, digits.shape[1], tile, interpret
+    )
+
+
+def pulse_matmul_op(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    group_exp: jnp.ndarray,
+    planes: int,
+    group: int = GROUP,
+    interpret: bool | None = None,
+    **block_kw,
+) -> jnp.ndarray:
+    """CSD-P pulse-code matmul (see `blmac_matmul.py`)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return pulse_matmul(
+        x, codes, group_exp, planes, group, interpret=interpret, **block_kw
+    )

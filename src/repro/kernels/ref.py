@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+These are the ground truth the kernels are swept against in
+`tests/test_kernels.py`; they are also the fallback implementation on
+backends without Pallas support.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def blmac_fir_ref(x: jnp.ndarray, qcoeffs: np.ndarray) -> jnp.ndarray:
+    """Exact type-I FIR via CSD bit layers (Eq. 2 + Eq. 3), jnp.
+
+    ``x``: (T,) integer samples; ``qcoeffs``: (taps,) host-side int64
+    quantized symmetric coefficients (static).  Returns (T - taps + 1,)
+    int32 — identical to ``filters.apply.fir_bit_layers``.
+    """
+    from ..core.csd import csd_digits
+
+    taps = qcoeffs.shape[0]
+    half = taps // 2
+    x = x.astype(jnp.int32)
+    n_out = x.shape[0] - taps + 1
+    # symmetric fold (Eq. 3)
+    folded = [
+        x[j : j + n_out] + x[taps - 1 - j : taps - 1 - j + n_out]
+        for j in range(half)
+    ]
+    folded.append(x[half : half + n_out])
+    digits = csd_digits(np.asarray(qcoeffs[: half + 1]))  # static (M, L)
+    acc = jnp.zeros((n_out,), jnp.int32)
+    for layer in range(digits.shape[1] - 1, -1, -1):
+        acc = acc << 1
+        for j in np.nonzero(digits[:, layer])[0]:
+            acc = acc + folded[j] if digits[j, layer] > 0 else acc - folded[j]
+    return acc
+
+
+def fir_direct_ref(x: jnp.ndarray, qcoeffs: np.ndarray) -> jnp.ndarray:
+    """Classical dot-product FIR (int32), the independent oracle."""
+    taps = qcoeffs.shape[0]
+    n_out = x.shape[0] - taps + 1
+    w = jnp.asarray(np.asarray(qcoeffs), jnp.int32)
+    windows = jnp.stack([x[j : j + n_out].astype(jnp.int32) for j in range(taps)], 1)
+    return windows @ w
+
+
+def pulse_matmul_ref(
+    x: jnp.ndarray,
+    codes: jnp.ndarray,
+    group_exp: jnp.ndarray,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Oracle for the pulse-code (CSD-P) quantized matmul.
+
+    ``codes``: (P, K, N) uint8, bit7=valid, bit6=sign, bits3..0=pos.
+    ``group_exp``: (K // group, N) int8 — weight = Σ_p ±2**(e_g − 14 + pos).
+    Reconstructs the float weight matrix then does a plain matmul.
+    """
+    w = pulse_decode_ref(codes, group_exp, x.shape[-1] and None)
+    return jnp.dot(x.astype(jnp.float32), w).astype(out_dtype)
+
+
+def pulse_decode_ref(codes: jnp.ndarray, group_exp: jnp.ndarray, _=None) -> jnp.ndarray:
+    """Decode pulse codes to the float32 weight matrix (K, N)."""
+    P, K, N = codes.shape
+    G = group_exp.shape[0]
+    group = K // G
+    valid = (codes >> 7) & 1
+    sign = jnp.where((codes >> 6) & 1 == 1, -1.0, 1.0)
+    pos = (codes & 0x0F).astype(jnp.int32)
+    e = jnp.repeat(group_exp.astype(jnp.int32), group, axis=0)  # (K, N)
+    mag = jnp.exp2((e[None] - 14 + pos).astype(jnp.float32))
+    return (valid * sign * mag).sum(axis=0)

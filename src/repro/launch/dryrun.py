@@ -1,0 +1,265 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell against the production mesh, prove the sharding config is
+coherent, and extract the roofline inputs from the compiled artifact.
+
+MUST be run as its own process (the XLA flag above is applied before any
+other import initializes jax).  One JSON per cell lands in
+benchmarks/out/dryrun/; `benchmarks/roofline_table.py` renders §Roofline.
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec  # noqa: E402
+
+from repro.configs import SHAPES, cells_for, get_config, input_specs  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    data_size,
+    make_rules,
+    sanitize_spec,
+    sanitized_shardings,
+)
+from repro.launch.mesh import (  # noqa: E402
+    HBM_BW,
+    HBM_BYTES,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.nn.common import (  # noqa: E402
+    abstract_params,
+    count_active_params,
+    count_params,
+    param_pspecs,
+)
+from repro.nn.model import model_decls  # noqa: E402
+from repro.roofline.hlo_analysis import analyze_hlo  # noqa: E402
+from repro.serving.engine import (  # noqa: E402
+    abstract_caches,
+    cache_pspecs,
+    make_decode_fn,
+    make_prefill_fn,
+)
+from repro.training.train_step import (  # noqa: E402
+    TrainHParams,
+    abstract_train_state,
+    make_train_step,
+    train_state_pspecs,
+)
+
+OUT_DEFAULT = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))), "benchmarks", "out", "dryrun")
+
+
+def _batch_shardings(mesh, rules, abstract_batch):
+    out = {}
+    for k, v in abstract_batch.items():
+        spec = PartitionSpec(rules.get("batch"), *([None] * (len(v.shape) - 1)))
+        out[k] = NamedSharding(mesh, sanitize_spec(mesh, spec, tuple(v.shape)))
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               cfg_overrides: dict | None = None):
+    """Build and lower one cell; returns (lowered, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, moe_groups=data_size(mesh))
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    rules = make_rules(mesh, shape.kind, shape.global_batch)
+    decls = model_decls(cfg)
+    abatch = input_specs(cfg, shape)
+    bsh = _batch_shardings(mesh, rules, abatch)
+
+    if shape.kind == "train":
+        hp = TrainHParams()
+        step = make_train_step(cfg, hp, mesh, rules)
+        astate = abstract_train_state(cfg, decls)
+        ssh = sanitized_shardings(
+            mesh, train_state_pspecs(cfg, decls, rules), astate)
+        f = jax.jit(step, in_shardings=(ssh, bsh),
+                    out_shardings=(ssh, None), donate_argnums=0)
+        lowered = f.lower(astate, abatch)
+    else:
+        aparams = abstract_params(decls, jnp.dtype(cfg.param_dtype))
+        psh = sanitized_shardings(mesh, param_pspecs(decls, rules), aparams,
+                                  tp_fallback_axis="model")
+        if shape.kind == "prefill":
+            fn = make_prefill_fn(cfg, cache_len=shape.seq_len,
+                                 mesh=mesh, rules=rules)
+            lowered = jax.jit(fn, in_shardings=(psh, bsh)).lower(
+                aparams, abatch)
+        else:  # decode
+            fn = make_decode_fn(cfg, mesh=mesh, rules=rules)
+            acaches = abstract_caches(cfg, shape.global_batch, shape.seq_len)
+            csh = sanitized_shardings(mesh, cache_pspecs(cfg, rules), acaches)
+            pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            pos_sh = NamedSharding(mesh, sanitize_spec(
+                mesh, PartitionSpec(rules.get("batch")), pos.shape))
+            astate = {"caches": acaches, "pos": pos}
+            state_sh = {"caches": csh, "pos": pos_sh}
+            # pin the OUTPUT cache sharding to the input's: without it the
+            # compiler picks its own layout — the state round-trips through
+            # resharding collectives every step and donation can't alias
+            # (§Perf iteration A5)
+            f = jax.jit(fn, in_shardings=(psh, bsh, state_sh),
+                        out_shardings=(None, state_sh), donate_argnums=2)
+            lowered = f.lower(aparams, abatch, astate)
+
+    meta = dict(arch=arch, shape=shape_name, kind=shape.kind,
+                multi_pod=multi_pod, n_devices=mesh.size,
+                seq_len=shape.seq_len, global_batch=shape.global_batch)
+    return lowered, meta, cfg, decls
+
+
+def model_flops(cfg, decls, shape) -> float:
+    """6·N·D (train) / 2·N·D (forward), N = active params."""
+    n_act = count_active_params(decls, cfg.experts_per_token, cfg.n_experts)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # decode: one token per row
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, tag: str = "baseline",
+             cfg_overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    lowered, meta, cfg, decls = lower_cell(arch, shape_name, multi_pod,
+                                           cfg_overrides)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+
+    shape = SHAPES[shape_name]
+    n_dev = meta["n_devices"]
+    mf = model_flops(cfg, decls, shape)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    compute_s = cost.flops / PEAK_FLOPS_BF16
+    memory_s = cost.hbm_bytes / HBM_BW
+    coll_s = cost.total_coll_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s), ("collective", coll_s)),
+        key=lambda kv: kv[1])[0]
+    result = dict(
+        meta,
+        tag=tag,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        n_params=count_params(decls),
+        n_active_params=count_active_params(
+            decls, cfg.experts_per_token, cfg.n_experts),
+        model_flops_total=mf,
+        model_flops_per_dev=mf / n_dev,
+        xla_flops_per_dev=float(ca.get("flops", -1.0)),
+        hlo_flops_per_dev=cost.flops,
+        hlo_hbm_bytes_per_dev=cost.hbm_bytes,
+        collective_bytes_per_dev=cost.total_coll_bytes,
+        collectives=cost.coll_bytes,
+        collective_counts=cost.coll_counts,
+        hbm_by_op=dict(sorted(cost.hbm_by_op.items(),
+                              key=lambda kv: -kv[1])[:12]),
+        mem_argument_bytes=mem.argument_size_in_bytes,
+        mem_output_bytes=mem.output_size_in_bytes,
+        mem_temp_bytes=mem.temp_size_in_bytes,
+        mem_alias_bytes=mem.alias_size_in_bytes,
+        mem_per_device_bytes=per_dev_bytes,
+        fits_hbm=bool(per_dev_bytes <= HBM_BYTES),
+        compute_term_s=compute_s,
+        memory_term_s=memory_s,
+        collective_term_s=coll_s,
+        dominant=dominant,
+        useful_flops_ratio=(mf / n_dev) / cost.flops if cost.flops else 0.0,
+    )
+    os.makedirs(out_dir, exist_ok=True)
+    stem = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}"
+    if tag != "baseline":
+        stem += f"__{tag}"
+    with open(os.path.join(out_dir, stem + ".json"), "w") as f:
+        json.dump(result, f, indent=1)
+    # always keep the partitioned HLO (gzipped) so analyzer improvements
+    # can re-derive the roofline without recompiling
+    import gzip
+
+    with gzip.open(os.path.join(out_dir, stem + ".hlo.txt.gz"), "wt") as f:
+        f.write(hlo)
+    if save_hlo:
+        with open(os.path.join(out_dir, stem + ".hlo.txt"), "w") as f:
+            f.write(hlo)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", help="architecture id (see repro.configs)")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch × shape × mesh) cell")
+    ap.add_argument("--out", default=OUT_DEFAULT)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=int, e.g. --set ssm_chunk=128")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = int(v)
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        from repro.configs import all_configs
+
+        for arch in all_configs():
+            for shape in cells_for(arch):
+                cells.append((arch, shape, False))
+                cells.append((arch, shape, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape (or --all) required")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        label = f"{arch} × {shape} × {'2-pod(512)' if mp else '1-pod(256)'}"
+        try:
+            r = run_cell(arch, shape, mp, args.out, args.save_hlo, args.tag,
+                         cfg_overrides=overrides or None)
+            print(f"[dryrun] OK   {label}: compile {r['compile_s']}s, "
+                  f"mem/dev {r['mem_per_device_bytes']/2**30:.2f} GiB "
+                  f"(fits={r['fits_hbm']}), dominant={r['dominant']}")
+            print(f"         terms: compute {r['compute_term_s']:.4f}s | "
+                  f"memory {r['memory_term_s']:.4f}s | "
+                  f"collective {r['collective_term_s']:.4f}s | "
+                  f"useful-flops {r['useful_flops_ratio']:.2f}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"[dryrun] FAIL {label}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

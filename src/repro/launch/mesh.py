@@ -1,0 +1,29 @@
+"""Production meshes.
+
+TPU v5e pod = 256 chips, arranged here as (data=16, model=16); the
+multi-pod deployment stacks pods on a leading `pod` axis that folds into
+data parallelism (DCN between pods carries only DP gradient reductions).
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh over however many (fake) devices the test session has."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline analysis
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (≈ per-direction, per chip)
+HBM_BYTES = 16 * 2**30  # 16 GiB per chip

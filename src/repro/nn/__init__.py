@@ -1,0 +1,16 @@
+"""Pure-JAX model zoo with declaration-based params and staged scans."""
+from .common import (
+    ParamDecl,
+    ShardCtx,
+    abstract_params,
+    count_params,
+    init_params,
+    param_pspecs,
+)
+from .model import decode_step, forward, loss_fn, model_decls, stage_plan
+
+__all__ = [
+    "ParamDecl", "ShardCtx", "abstract_params", "count_params",
+    "init_params", "param_pspecs", "decode_step", "forward", "loss_fn",
+    "model_decls", "stage_plan",
+]

@@ -1,0 +1,288 @@
+"""GQA/MQA attention with chunked online-softmax (flash-style) evaluation.
+
+One code path serves every attention variant in the zoo: grouped KV heads,
+RoPE, QKV bias (qwen), attention-logit softcap (gemma2), sliding windows
+(mixtral / gemma2-local / recurrentgemma), and ring-buffer KV caches whose
+masks are driven purely by *absolute positions* stored next to the cache —
+so a rotated ring never needs un-rotation.
+
+The chunked evaluation never materializes an (Sq × Skv) score matrix:
+memory is O(Sq × kv_chunk) per head group, which is what lets the 32k
+prefill and 500k decode cells compile at sane per-chip footprints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDecl, ShardCtx, cast
+from .layers import rope
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnMeta:
+    """Static per-instance attention settings (one per block-pattern slot)."""
+
+    window: int = 0  # 0 = global causal; >0 = sliding window
+    kv_chunk: int = 1024
+    triangular: bool = True  # skip fully-masked kv chunks (train/prefill)
+
+
+# ---------------------------------------------------------------------------
+# functional chunked attention
+# ---------------------------------------------------------------------------
+
+
+def _mask(q_pos, kv_pos, window):
+    """(B, Sq), (B, C) → (B, 1, 1, Sq, C) validity."""
+    qp = q_pos[:, None, None, :, None]
+    kp = kv_pos[:, None, None, None, :]
+    ok = (kp <= qp) & (kp >= 0)
+    if window > 0:
+        ok &= qp - kp < window
+    return ok
+
+
+def _chunk_scores(q, k_c, scale, softcap, kv_layout="bshd"):
+    # q: (B, Sq, Hkv, G, D) → scores (B, Hkv, G, Sq, C)
+    eq = "bqhgd,bhcd->bhgqc" if kv_layout == "bhsd" else "bqhgd,bchd->bhgqc"
+    s = jnp.einsum(eq, q, k_c).astype(jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    return s
+
+
+def _combine(carry, qg, q_pos, kc, vc, pc, scale, softcap, window,
+             kv_layout="bshd"):
+    """Online-softmax merge of one kv chunk into the running (m, l, acc)."""
+    m, l, acc = carry
+    s = _chunk_scores(qg, kc, scale, softcap, kv_layout)  # (B,Hkv,G,Sq,C)
+    ok = _mask(q_pos, pc, window)
+    s = jnp.where(ok, s, NEG)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    alpha = jnp.exp(m - m_new)
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(ok, p, 0.0)
+    l = l * alpha + p.sum(axis=-1)
+    ev = "bhgqc,bhcv->bhgqv" if kv_layout == "bhsd" else "bhgqc,bchv->bhgqv"
+    pv = jnp.einsum(ev, p.astype(vc.dtype), vc)
+    acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+    return m_new, l, acc
+
+
+def chunked_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, Dv)
+    q_pos: jax.Array,  # (B, Sq)
+    kv_pos: jax.Array,  # (B, Skv), -1 ⇒ invalid slot
+    *,
+    scale: float,
+    window: int = 0,
+    softcap: float | None = None,
+    kv_chunk: int = 1024,
+    triangular: bool = False,
+    kv_layout: str = "bshd",  # decode caches use "bhsd" (no per-chunk
+                              # transposes — §Perf iteration A4)
+) -> jax.Array:
+    b, sq, h, d = q.shape
+    if kv_layout == "bhsd":
+        _, hkv, skv, dv = v.shape
+    else:
+        _, skv, hkv, dv = v.shape
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    c = min(kv_chunk, skv)
+    if skv % c:
+        raise ValueError(f"Skv={skv} not a multiple of kv_chunk={c}")
+    n_chunks = skv // c
+
+
+    if triangular and sq == skv and n_chunks > 1:
+        # Causal (optionally windowed) self-attention: process q in chunks
+        # and give each q chunk only the kv chunks its mask can reach —
+        # *statically*.  The compiled FLOPs drop ~2× for global causal and
+        # ~S/window× for sliding-window layers; this is real work removed,
+        # not masking (see EXPERIMENTS §Perf).
+        out_chunks = []
+        for qi in range(n_chunks):
+            qc = qg[:, qi * c : (qi + 1) * c]
+            qp = q_pos[:, qi * c : (qi + 1) * c]
+            carry = (
+                jnp.full((b, hkv, g, c), NEG, jnp.float32),
+                jnp.zeros((b, hkv, g, c), jnp.float32),
+                jnp.zeros((b, hkv, g, c, dv), jnp.float32),
+            )
+            for ki in range(qi + 1):
+                if window > 0 and qi * c - ((ki + 1) * c - 1) >= window:
+                    continue  # statically unreachable through the window
+                kc = k[:, ki * c : (ki + 1) * c]
+                vc = v[:, ki * c : (ki + 1) * c]
+                pc = kv_pos[:, ki * c : (ki + 1) * c]
+                carry = _combine(carry, qc, qp, kc, vc, pc,
+                                 scale, softcap, window, kv_layout)
+            m, l, acc = carry
+            out_chunks.append(acc / jnp.maximum(l, 1e-30)[..., None])
+        out = jnp.concatenate(out_chunks, axis=3)  # (B,Hkv,G,Sq,Dv)
+    else:
+        init = (
+            jnp.full((b, hkv, g, sq), NEG, jnp.float32),
+            jnp.zeros((b, hkv, g, sq), jnp.float32),
+            jnp.zeros((b, hkv, g, sq, dv), jnp.float32),
+        )
+
+        # Read K/V chunks IN PLACE with dynamic_slice — reshaping the cache
+        # into scan xs (swapaxes) materializes a transposed copy of the
+        # whole cache every step (§Perf iteration A3: 4.2 TiB/step → GBs
+        # on deepseek-coder-33b decode_32k).
+        s_axis = 2 if kv_layout == "bhsd" else 1
+        def body(carry, i):
+            kc = jax.lax.dynamic_slice_in_dim(k, i * c, c, axis=s_axis)
+            vc = jax.lax.dynamic_slice_in_dim(v, i * c, c, axis=s_axis)
+            pc = jax.lax.dynamic_slice_in_dim(kv_pos, i * c, c, axis=1)
+            return _combine(carry, qg, q_pos, kc, vc, pc,
+                            scale, softcap, window, kv_layout), None
+
+        (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# the attention mixer block
+# ---------------------------------------------------------------------------
+
+
+def attn_decls(cfg) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    decls: dict[str, Any] = {
+        "wq": ParamDecl((d, h, dh), jnp.float32, ("d_model", "heads", "head_dim"), "fan_in"),
+        "wk": ParamDecl((d, hkv, dh), jnp.float32, ("d_model", "kv_heads", "head_dim"), "fan_in"),
+        "wv": ParamDecl((d, hkv, dh), jnp.float32, ("d_model", "kv_heads", "head_dim"), "fan_in"),
+        "wo": ParamDecl((h, dh, d), jnp.float32, ("heads", "head_dim", "d_model"), "fan_in", fan_axis=1),
+    }
+    if cfg.attn_bias:
+        decls["bq"] = ParamDecl((h, dh), jnp.float32, ("heads", "head_dim"), "zeros")
+        decls["bk"] = ParamDecl((hkv, dh), jnp.float32, ("kv_heads", "head_dim"), "zeros")
+        decls["bv"] = ParamDecl((hkv, dh), jnp.float32, ("kv_heads", "head_dim"), "zeros")
+    return decls
+
+
+def _qkv(p, x, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"], dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"], dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"], dt))
+    if "bq" in p:
+        q = q + cast(p["bq"], dt)
+        k = k + cast(p["bk"], dt)
+        v = v + cast(p["bv"], dt)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _scale(cfg) -> float:
+    s = cfg.query_scale if cfg.query_scale else cfg.head_dim
+    return 1.0 / math.sqrt(s)
+
+
+def _maybe_repeat_kv(k, v, cfg, ctx: ShardCtx):
+    """Under TP, grouped-query attention with few KV heads would force the
+    partitioner to reshard around the (hkv, g) reshape every kv chunk — a
+    collective storm.  Megatron-style practice: replicate KV heads up to
+    the query head count so the `heads` axis shards uniformly end-to-end.
+    Unsharded (test) mode keeps the memory-lean grouped form."""
+    if ctx.rules is None or cfg.n_heads == cfg.n_kv_heads:
+        return k, v
+    g = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
+
+
+def attn_apply(p, x, ctx: ShardCtx, cfg, meta: AttnMeta):
+    """Full-sequence path (train & prefill).  Returns (y, cache | None)."""
+    b, s, _ = x.shape
+    pos = ctx.positions
+    q, k, v = _qkv(p, x, cfg, pos)
+    kr, vr = _maybe_repeat_kv(k, v, cfg, ctx)
+    q = ctx.shard(q, ("batch", "seq", "heads", None))
+    kr = ctx.shard(kr, ("batch", "seq", "heads", None))
+    vr = ctx.shard(vr, ("batch", "seq", "heads", None))
+    # adaptive chunk: cap the triangular unroll at ~16 chunks per side so
+    # the HLO stays compact inside scanned layers
+    kvc = min(meta.kv_chunk, s) if s <= meta.kv_chunk else max(meta.kv_chunk, s // 16)
+    if s % kvc:
+        kvc = s
+    out = chunked_attention(
+        q, kr, vr, pos, pos,
+        scale=_scale(cfg), window=meta.window, softcap=cfg.attn_softcap,
+        kv_chunk=kvc, triangular=meta.triangular,
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], x.dtype))
+    y = ctx.shard(y, ("batch", "seq", None))
+    cache = None
+    if ctx.make_cache:
+        cache = build_kv_cache(k, v, pos, ctx.cache_len, meta.window)
+    return y, cache
+
+
+def cache_size(cache_len: int, window: int) -> int:
+    return min(cache_len, window) if window > 0 else cache_len
+
+
+def build_kv_cache(k, v, pos, cache_len: int, window: int) -> dict:
+    """Build a (ring) cache from prefilled K/V (rope already applied).
+
+    Layout is (B, Hkv, W, Dh) — decode-optimized: the attention einsums
+    read it without per-chunk transposes (§Perf A4); the one transpose
+    here is amortized over the whole generation."""
+    b, s, hkv, dh = k.shape
+    w = cache_size(cache_len, window)
+    ck = jnp.zeros((b, hkv, w, dh), k.dtype)
+    cv = jnp.zeros((b, hkv, w, v.shape[-1]), v.dtype)
+    cp = jnp.full((b, w), -1, jnp.int32)
+    take = min(s, w)
+    ks = k[:, s - take :].swapaxes(1, 2)  # (B, Hkv, take, Dh)
+    vs = v[:, s - take :].swapaxes(1, 2)
+    ps = pos[:, s - take :]
+    slots = ps % w  # unique because positions are consecutive, take <= w
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(hkv)[None, :, None]
+    ck = ck.at[bidx, hidx, slots[:, None, :]].set(ks)
+    cv = cv.at[bidx, hidx, slots[:, None, :]].set(vs)
+    cp = cp.at[jnp.arange(b)[:, None], ps % w].set(ps)
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+def attn_decode(p, x, cache: dict, ctx: ShardCtx, cfg, meta: AttnMeta):
+    """Single-token decode: x (B, 1, d); cache slots addressed pos % W."""
+    b = x.shape[0]
+    pos = ctx.positions  # (B, 1) current absolute position
+    q, k, v = _qkv(p, x, cfg, pos)
+    hkv = cache["k"].shape[1]
+    w = cache["k"].shape[2]
+    slot = (pos[:, 0] % w).astype(jnp.int32)
+    bidx = jnp.arange(b)[:, None]
+    hidx = jnp.arange(hkv)[None, :]
+    ck = cache["k"].at[bidx, hidx, slot[:, None]].set(k[:, 0])
+    cv = cache["v"].at[bidx, hidx, slot[:, None]].set(v[:, 0])
+    cp = cache["pos"].at[jnp.arange(b), slot].set(pos[:, 0])
+    ck = ctx.shard(ck, ("batch", "kv_heads", "cache_seq", None))
+    cv = ctx.shard(cv, ("batch", "kv_heads", "cache_seq", None))
+    kvc = min(meta.kv_chunk, w) if w <= meta.kv_chunk else max(meta.kv_chunk, w // 64)
+    if w % kvc:
+        kvc = w
+    out = chunked_attention(
+        q, ck, cv, pos, cp,
+        scale=_scale(cfg), window=meta.window, softcap=cfg.attn_softcap,
+        kv_chunk=kvc, triangular=False, kv_layout="bhsd",
+    )
+    y = jnp.einsum("bshk,hkd->bsd", out, cast(p["wo"], x.dtype))
+    return y, {"k": ck, "v": cv, "pos": cp}

@@ -1,0 +1,152 @@
+"""Parameter-declaration system and sharding plumbing.
+
+A model is declared once as a tree of :class:`ParamDecl` (shape, dtype,
+logical axes, initializer).  From the declarations we derive, without
+duplication:
+
+  * ``init_params``      — materialized, initialized parameters,
+  * ``abstract_params``  — ShapeDtypeStructs for ``jit(...).lower()``
+                           (the multi-pod dry-run never allocates weights),
+  * ``param_pspecs``     — PartitionSpecs via logical→mesh axis rules.
+
+Logical axis vocabulary (mapped by `distributed/sharding.py` rules):
+``batch seq d_model d_model2 vocab heads kv_heads head_dim ff experts
+state layers`` — `None` for replicated dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple[int, ...]
+    dtype: Any = jnp.float32
+    axes: tuple[str | None, ...] = ()
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+    fan_axis: int = 0  # which axis is fan-in for "fan_in" init
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} vs shape {self.shape}")
+
+
+def _leaves_with_path(tree: Pytree):
+    return jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def init_params(decls: Pytree, key: jax.Array, param_dtype=None) -> Pytree:
+    """Materialize parameters from declarations (deterministic per path)."""
+    flat, treedef = _leaves_with_path(decls)
+    keys = jax.random.split(key, max(1, len(flat)))
+    out = []
+    for (path, d), k in zip(flat, keys):
+        dtype = param_dtype or d.dtype
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, dtype)
+        elif d.init == "normal":
+            v = jax.random.normal(k, d.shape, dtype) * d.scale
+        elif d.init == "embed":
+            v = jax.random.normal(k, d.shape, dtype) * d.scale
+        elif d.init == "fan_in":
+            fan = d.shape[d.fan_axis] if d.shape else 1
+            v = jax.random.normal(k, d.shape, dtype) * (d.scale / math.sqrt(fan))
+        else:
+            raise ValueError(f"unknown init {d.init!r}")
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(decls: Pytree, param_dtype=None) -> Pytree:
+    """ShapeDtypeStructs — no allocation; feeds jit(...).lower()."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, param_dtype or d.dtype),
+        decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl),
+    )
+
+
+def param_pspecs(decls: Pytree, rules: dict[str, Any]) -> Pytree:
+    """PartitionSpec tree from the logical→mesh axis rules."""
+
+    def spec(d: ParamDecl) -> PartitionSpec:
+        axes = d.axes or (None,) * len(d.shape)
+        return PartitionSpec(*(rules.get(a) if a else None for a in axes))
+
+    return jax.tree_util.tree_map(
+        spec, decls, is_leaf=lambda x: isinstance(x, ParamDecl)
+    )
+
+
+def count_params(decls: Pytree) -> int:
+    flat, _ = _leaves_with_path(decls)
+    return sum(math.prod(d.shape) for _, d in flat)
+
+
+def count_active_params(decls: Pytree, experts_per_token: int = 0,
+                        n_experts: int = 0) -> int:
+    """Active parameters per token: expert-stacked weights (logical axis
+    'experts') count at k/E — the MoE MODEL_FLOPS convention (6·N_active·D)."""
+    flat, _ = _leaves_with_path(decls)
+    total = 0.0
+    for _, d in flat:
+        n = math.prod(d.shape)
+        if n_experts and d.axes and "experts" in d.axes:
+            n = n * experts_per_token / n_experts
+        total += n
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    """Threaded through every apply(); carries the activation-sharding rules
+    and step context.  ``rules`` is None in unsharded (test) mode."""
+
+    rules: dict[str, Any] | None = None
+    mesh: Any = None  # jax.sharding.Mesh when sharded
+    positions: jax.Array | None = None  # (B, S) int32 absolute positions
+    deterministic: bool = True
+    compute_dtype: Any = jnp.bfloat16
+    make_cache: bool = False
+    cache_len: int = 0
+
+    def shard(self, x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+        if self.rules is None or self.mesh is None:
+            return x
+        # a mesh axis may appear at most once per spec: first logical axis
+        # wins (e.g. SP decode maps cache_seq to (data, model); kv_heads
+        # must then stay replicated)
+        used: set[str] = set()
+        entries = []
+        for a in axes:
+            e = self.rules.get(a) if a else None
+            names = e if isinstance(e, tuple) else (e,) if e else ()
+            if any(n in used for n in names):
+                e = None
+                names = ()
+            used.update(names)
+            entries.append(e)
+        sh = jax.sharding.NamedSharding(self.mesh, PartitionSpec(*entries))
+        return jax.lax.with_sharding_constraint(x, sh)
+
+
+def cast(x: jax.Array, dtype) -> jax.Array:
+    return x.astype(dtype) if x.dtype != dtype else x

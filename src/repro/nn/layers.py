@@ -1,0 +1,156 @@
+"""Shared layers: norms, embeddings, position encodings, MLPs."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDecl, ShardCtx, cast
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def norm_decls(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ParamDecl((d,), jnp.float32, ("d_model",), "zeros")}
+    if kind == "rmsnorm_unit":  # plain 1.0-centred scale
+        return {"scale": ParamDecl((d,), jnp.float32, ("d_model",), "ones")}
+    if kind == "layernorm":
+        return {
+            "scale": ParamDecl((d,), jnp.float32, ("d_model",), "ones"),
+            "bias": ParamDecl((d,), jnp.float32, ("d_model",), "zeros"),
+        }
+    raise ValueError(kind)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind in ("rmsnorm", "rmsnorm_unit"):
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        # gemma-style (1 + w) for "rmsnorm" (zero-init scale); unit for others
+        w = p["scale"] + 1.0 if kind == "rmsnorm" else p["scale"]
+        return (y * w).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings & unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_decls(vocab: int, d: int) -> dict:
+    # fan-in (1/sqrt d) init keeps tied-head logits O(1); archs that feed
+    # the table straight into the stack (gemma family) set embed_scale to
+    # recover unit-variance activations.
+    return {
+        "table": ParamDecl((vocab, d), jnp.float32, ("vocab", "d_model"),
+                           "fan_in", fan_axis=1)
+    }
+
+
+def embed_lookup(p: dict, tokens: jax.Array, ctx: ShardCtx,
+                 scale_by_sqrt_d: bool = False) -> jax.Array:
+    table = cast(p["table"], ctx.compute_dtype)
+    x = table[tokens]  # gather; vocab-sharded tables gather fine under SPMD
+    if scale_by_sqrt_d:
+        x = x * math.sqrt(table.shape[-1])
+    return ctx.shard(x, ("batch", "seq", None))
+
+
+def unembed_decls(d: int, vocab: int) -> dict:
+    return {
+        "kernel": ParamDecl((d, vocab), jnp.float32, ("d_model", "vocab"),
+                            "fan_in")
+    }
+
+
+def unembed(p: dict, x: jax.Array, ctx: ShardCtx,
+            tied_table: jax.Array | None = None,
+            softcap: float | None = None) -> jax.Array:
+    if tied_table is not None:
+        logits = jnp.einsum("bsd,vd->bsv", x, cast(tied_table, x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, cast(p["kernel"], x.dtype))
+    logits = logits.astype(jnp.float32)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return ctx.shard(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# rotary & sinusoidal position encodings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D) with D even; positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal(positions: jax.Array, d: int) -> jax.Array:
+    """(B, S) → (B, S, d) classic transformer sinusoids."""
+    half = d // 2
+    freq = jnp.exp(
+        -math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_decls(d: int, ff: int, kind: str, bias: bool = False) -> dict:
+    decls: dict[str, Any] = {}
+    if kind in ("swiglu", "geglu"):
+        decls["gate"] = ParamDecl((d, ff), jnp.float32, ("d_model", "ff"), "fan_in")
+        decls["up"] = ParamDecl((d, ff), jnp.float32, ("d_model", "ff"), "fan_in")
+    else:  # gelu
+        decls["up"] = ParamDecl((d, ff), jnp.float32, ("d_model", "ff"), "fan_in")
+        if bias:
+            decls["up_b"] = ParamDecl((ff,), jnp.float32, ("ff",), "zeros")
+    decls["down"] = ParamDecl((ff, d), jnp.float32, ("ff", "d_model"), "fan_in")
+    if bias:
+        decls["down_b"] = ParamDecl((d,), jnp.float32, ("d_model",), "zeros")
+    return decls
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str, ctx: ShardCtx) -> jax.Array:
+    dt = x.dtype
+    if kind in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, cast(p["gate"], dt))
+        u = jnp.einsum("bsd,df->bsf", x, cast(p["up"], dt))
+        act = jax.nn.silu(g) if kind == "swiglu" else jax.nn.gelu(g)
+        h = act * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, cast(p["up"], dt))
+        if "up_b" in p:
+            h = h + cast(p["up_b"], dt)
+        h = jax.nn.gelu(h)
+    h = ctx.shard(h, ("batch", "seq", "ff"))
+    y = jnp.einsum("bsf,fd->bsd", h, cast(p["down"], dt))
+    if "down_b" in p:
+        y = y + cast(p["down_b"], dt)
+    return ctx.shard(y, ("batch", "seq", None))

@@ -1,0 +1,210 @@
+"""The language model: embed → staged, scanned residual blocks → head.
+
+Heterogeneous layer stacks (gemma2's local/global alternation, Griffin's
+R-R-A pattern, DeepSeek's dense-then-MoE split) are grouped into *stages*:
+maximal runs of a repeating layer unit.  Each stage's params are stacked
+along a leading `layers` axis and the unit is `lax.scan`ned (optionally
+rematerialized), so HLO size is O(#stages), not O(depth) — which is also
+what keeps the 80-layer dry-run compiles tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import BlockMeta, block_apply, block_decode, block_decls
+from .common import ParamDecl, ShardCtx, cast
+from .layers import (
+    apply_norm,
+    embed_decls,
+    embed_lookup,
+    norm_decls,
+    sinusoidal,
+    unembed,
+    unembed_decls,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    metas: tuple[BlockMeta, ...]
+    repeat: int
+
+
+def _layer_meta(cfg, idx: int) -> BlockMeta:
+    mixer = cfg.block_pattern[idx % len(cfg.block_pattern)]
+    if mixer == "attn" and cfg.attn_kind == "mla":
+        mixer = "mla"
+    window = 0
+    if mixer in ("attn", "mla"):
+        window = cfg.window_pattern[idx % len(cfg.window_pattern)]
+    if cfg.ffn_pattern == "none":
+        ffn = "none"
+    elif cfg.n_experts and idx >= cfg.first_dense_layers:
+        ffn = "moe"
+    else:
+        ffn = "mlp"
+    return BlockMeta(mixer=mixer, window=window, ffn=ffn, d_ff=cfg.d_ff)
+
+
+def stage_plan(cfg) -> tuple[Stage, ...]:
+    metas = [_layer_meta(cfg, i) for i in range(cfg.n_layers)]
+    stages: list[Stage] = []
+    i = 0
+    n = len(metas)
+    while i < n:
+        best_u, best_r = 1, 1
+        for u in (1, 2, 3, 4, 6):
+            if i + u > n:
+                break
+            r = 1
+            while i + (r + 1) * u <= n and metas[i + r * u : i + (r + 1) * u] == metas[i : i + u]:
+                r += 1
+            if r >= 2 and u * r > best_u * best_r:
+                best_u, best_r = u, r
+        stages.append(Stage(tuple(metas[i : i + best_u]), best_r))
+        i += best_u * best_r
+    return tuple(stages)
+
+
+def _stack_decl(d: ParamDecl, repeat: int) -> ParamDecl:
+    axes = d.axes or (None,) * len(d.shape)
+    return ParamDecl((repeat,) + d.shape, d.dtype, ("layers",) + tuple(axes),
+                     d.init, d.scale, d.fan_axis + 1)
+
+
+def model_decls(cfg) -> dict:
+    decls: dict[str, Any] = {}
+    if cfg.input_kind == "tokens":
+        decls["embed"] = embed_decls(cfg.vocab_size, cfg.d_model)
+    for si, st in enumerate(stage_plan(cfg)):
+        unit = {f"slot{j}": block_decls(cfg, m) for j, m in enumerate(st.metas)}
+        decls[f"stage{si}"] = jax.tree_util.tree_map(
+            lambda d: _stack_decl(d, st.repeat), unit,
+            is_leaf=lambda x: isinstance(x, ParamDecl),
+        )
+    decls["final_norm"] = norm_decls(cfg.d_model, cfg.norm)
+    if not (cfg.tie_embeddings and cfg.input_kind == "tokens"):
+        decls["lm_head"] = unembed_decls(cfg.d_model, cfg.vocab_size)
+    return decls
+
+
+def _embed_in(params, batch, cfg, ctx: ShardCtx):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if cfg.input_kind == "embeds":
+        x = batch.get("embeds", batch.get("embed")).astype(dt)
+    else:
+        tokens = batch.get("tokens", batch.get("token"))
+        x = embed_lookup(params["embed"], tokens, ctx,
+                         scale_by_sqrt_d=cfg.embed_scale)
+        x = x.astype(dt)
+    if cfg.pos_emb == "sinusoidal":
+        x = x + sinusoidal(ctx.positions, cfg.d_model).astype(dt)
+    return x
+
+
+def _head(params, x, cfg, ctx: ShardCtx):
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    tied = params["embed"]["table"] if (
+        cfg.tie_embeddings and cfg.input_kind == "tokens") else None
+    return unembed(params.get("lm_head"), x, ctx, tied_table=tied,
+                   softcap=cfg.logit_softcap or None)
+
+
+def forward(params, batch, cfg, ctx: ShardCtx):
+    """Full-sequence pass.  Returns (logits, aux_loss, caches|None)."""
+    x = _embed_in(params, batch, cfg, ctx)
+    plan = stage_plan(cfg)
+    caches = [] if ctx.make_cache else None
+    aux_total = jnp.float32(0.0)
+    for si, st in enumerate(plan):
+        sp = params[f"stage{si}"]
+
+        def unit_fn(x, unit_params, _metas=st.metas):
+            cs, aux = [], jnp.float32(0.0)
+            for j, meta in enumerate(_metas):
+                x, c, a = block_apply(unit_params[f"slot{j}"], x, ctx, cfg, meta)
+                cs.append(c)
+                aux = aux + a
+            return x, tuple(cs), aux
+
+        if cfg.scan_layers:
+            def body(carry, unit_params, _fn=unit_fn):
+                x, cs, aux = _fn(carry, unit_params)
+                return x, (cs, aux)
+
+            if cfg.remat == "full":
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            x, (cs_stack, aux_stack) = jax.lax.scan(body, x, sp)
+            aux_total = aux_total + aux_stack.sum()
+            if caches is not None:
+                caches.append(cs_stack)
+        else:
+            for r in range(st.repeat):
+                unit_params = jax.tree_util.tree_map(lambda a: a[r], sp)
+                x, cs, aux = unit_fn(x, unit_params)
+                aux_total = aux_total + aux
+                if caches is not None:
+                    caches.append(cs)
+    logits = _head(params, x, cfg, ctx)
+    return logits, aux_total, caches
+
+
+def decode_step(params, batch, caches, ctx: ShardCtx, cfg):
+    """One-token step against the cache.  Returns (logits, new_caches)."""
+    x = _embed_in(params, batch, cfg, ctx)
+    plan = stage_plan(cfg)
+    new_caches = []
+    for si, st in enumerate(plan):
+        sp = params[f"stage{si}"]
+        cache_si = caches[si]
+
+        def unit_fn(x, unit_params, unit_cache, _metas=st.metas):
+            new_cs = []
+            for j, meta in enumerate(_metas):
+                x, c = block_decode(unit_params[f"slot{j}"], x,
+                                    unit_cache[j], ctx, cfg, meta)
+                new_cs.append(c)
+            return x, tuple(new_cs)
+
+        if cfg.scan_layers:
+            def body(carry, xs, _fn=unit_fn):
+                unit_params, unit_cache = xs
+                x, new_cs = _fn(carry, unit_params, unit_cache)
+                return x, new_cs
+
+            x, ncache = jax.lax.scan(body, x, (sp, cache_si))
+            new_caches.append(ncache)
+        else:
+            ncs = []
+            for r in range(st.repeat):
+                unit_params = jax.tree_util.tree_map(lambda a: a[r], sp)
+                x, cs = unit_fn(x, unit_params, cache_si[r])
+                ncs.append(cs)
+            new_caches.append(ncs)
+    logits = _head(params, x, cfg, ctx)
+    return logits, new_caches
+
+
+def loss_fn(params, batch, cfg, ctx: ShardCtx):
+    """Masked token cross-entropy (+ MoE aux, + z-loss)."""
+    logits, aux, _ = forward(params, batch, cfg, ctx)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    xent = (logz - ll) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = xent.sum() / denom
+    zloss = 1e-4 * ((logz * mask) ** 2).sum() / denom
+    total = loss + zloss + cfg.aux_loss_coef * aux
+    metrics = {"xent": loss, "zloss": zloss, "aux": aux}
+    return total, metrics

@@ -1,0 +1,118 @@
+"""Mixture-of-Experts FFN: top-k routing, group-local capacity dispatch.
+
+Dispatch is GShard-style but sort-free and *group-local*: tokens are split
+into G groups aligned with the data shards, each group scatters into its
+own (E, C_g, d) buffer — so the scatter itself needs no cross-device
+traffic; the cross-device all-to-all appears where it belongs, in the
+expert einsum whose expert axis is sharded over `model` (EP).  Capacity
+overflow drops (counted in aux stats); router styles: `softmax` (Mixtral)
+and `sigmoid_norm` (DeepSeek-V3).
+
+Shared experts (DeepSeek) are a plain dense MLP added to the routed path.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDecl, ShardCtx, cast
+from .layers import apply_mlp, mlp_decls
+
+
+def moe_decls(cfg) -> dict:
+    d, e, ffe = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    decls: dict[str, Any] = {
+        "router": ParamDecl((d, e), jnp.float32, ("d_model", None), "fan_in"),
+        "gate": ParamDecl((e, d, ffe), jnp.float32,
+                          ("experts", "d_model", "expert_ff"), "fan_in", fan_axis=1),
+        "up": ParamDecl((e, d, ffe), jnp.float32,
+                        ("experts", "d_model", "expert_ff"), "fan_in", fan_axis=1),
+        "down": ParamDecl((e, ffe, d), jnp.float32,
+                          ("experts", "expert_ff", "d_model"), "fan_in", fan_axis=1),
+    }
+    if cfg.n_shared_experts:
+        decls["shared"] = mlp_decls(
+            d, cfg.moe_d_ff * cfg.n_shared_experts, "swiglu"
+        )
+    return decls
+
+
+def _positions_in_expert(e_idx: jax.Array, n_experts: int) -> jax.Array:
+    """Rank of each routed slot within its expert (stable, sort-based).
+
+    ``e_idx``: (M,) expert ids.  Returns (M,) positions 0..count_e-1.
+    """
+    m = e_idx.shape[0]
+    order = jnp.argsort(e_idx, stable=True)
+    sorted_e = e_idx[order]
+    counts = jnp.bincount(sorted_e, length=n_experts)
+    starts = jnp.cumsum(counts) - counts
+    rank_sorted = jnp.arange(m) - starts[sorted_e]
+    return jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+
+
+def moe_apply(p, x: jax.Array, ctx: ShardCtx, cfg):
+    """x: (B, S, d) → (y, aux_loss).  Groups = cfg.moe_groups (align with
+    the number of data shards so dispatch stays shard-local)."""
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, min(cfg.moe_groups, t))
+    while t % g:
+        g -= 1
+    tg = t // g
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cap = max(k, int(cfg.capacity_factor * tg * k / e))
+    xt = x.reshape(g, tg, d)
+    xt = ctx.shard(xt, ("batch", None, None))
+
+    logits = jnp.einsum("gtd,de->gte", xt, cast(p["router"], x.dtype))
+    logits = logits.astype(jnp.float32)
+    if cfg.router == "sigmoid_norm":
+        scores = jax.nn.sigmoid(logits)
+        w, idx = jax.lax.top_k(scores, k)
+        w = w / (w.sum(-1, keepdims=True) + 1e-9)
+        probs = scores / (scores.sum(-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, idx = jax.lax.top_k(probs, k)
+        w = w / (w.sum(-1, keepdims=True) + 1e-9)
+
+    def dispatch_group(xg, idxg, wg):
+        # xg: (Tg, d), idxg/wg: (Tg, k)
+        e_flat = idxg.reshape(-1)  # (Tg*k,)
+        pos = _positions_in_expert(e_flat, e)
+        keep = pos < cap
+        p_idx = jnp.where(keep, pos, cap)  # OOB ⇒ dropped by scatter mode
+        x_rep = jnp.repeat(xg, k, axis=0)  # (Tg*k, d)
+        buf = jnp.zeros((e, cap, d), xg.dtype)
+        buf = buf.at[e_flat, p_idx].add(
+            x_rep * keep[:, None].astype(xg.dtype), mode="drop"
+        )
+        return buf, (e_flat, jnp.minimum(p_idx, cap - 1), keep)
+
+    buf, addr = jax.vmap(dispatch_group)(xt, idx, w)  # buf: (G, E, C, d)
+    buf = ctx.shard(buf, ("batch", "experts", None, None))
+    h_g = jnp.einsum("gecd,edf->gecf", buf, cast(p["gate"], x.dtype))
+    h_u = jnp.einsum("gecd,edf->gecf", buf, cast(p["up"], x.dtype))
+    h = jax.nn.silu(h_g) * h_u
+    h = ctx.shard(h, ("batch", "experts", None, None))
+    yb = jnp.einsum("gecf,efd->gecd", h, cast(p["down"], x.dtype))
+    yb = ctx.shard(yb, ("batch", "experts", None, None))
+
+    def gather_group(ybg, addrg, wg):
+        e_flat, p_idx, keep = addrg
+        y_sel = ybg[e_flat, p_idx] * keep[:, None].astype(ybg.dtype)
+        y_sel = y_sel.reshape(-1, k, d) * wg[..., None].astype(ybg.dtype)
+        return y_sel.sum(axis=1)
+
+    y = jax.vmap(gather_group)(yb, addr, w).reshape(b, s, d)
+
+    # load-balance aux (switch-style) + drop fraction for monitoring
+    me = probs.mean(axis=(0, 1))  # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[idx.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    if cfg.n_shared_experts:
+        y = y + apply_mlp(p["shared"], x, "swiglu", ctx)
+    return ctx.shard(y, ("batch", "seq", None)), aux

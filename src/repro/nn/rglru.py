@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+    r_t = σ(W_a x_t + b_a)          recurrence gate
+    i_t = σ(W_x x_t + b_x)          input gate
+    a_t = exp(−c · softplus(Λ) · r_t),   c = 8
+    h_t = a_t h_{t−1} + sqrt(1 − a_t²) · (i_t ⊙ x_t)
+
+evaluated with an associative scan over the sequence (log-depth, shardable)
+— plus the surrounding temporal block: linear → causal conv1d(4) → RG-LRU,
+gated by a GeLU branch, as in the Griffin recurrent block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDecl, ShardCtx, cast
+from .ssd import causal_conv1d
+
+_C = 8.0
+
+
+def rglru_decls(cfg) -> dict:
+    d, dr = cfg.d_model, cfg.rglru_width
+    return {
+        "gate_proj": ParamDecl((d, dr), jnp.float32, ("d_model", "ff"), "fan_in"),
+        "rec_proj": ParamDecl((d, dr), jnp.float32, ("d_model", "ff"), "fan_in"),
+        "conv_w": ParamDecl((cfg.conv_width, dr), jnp.float32, (None, "ff"), "fan_in"),
+        "conv_b": ParamDecl((dr,), jnp.float32, ("ff",), "zeros"),
+        "w_a": ParamDecl((dr, dr), jnp.float32, ("ff", None), "fan_in"),
+        "b_a": ParamDecl((dr,), jnp.float32, (None,), "zeros"),
+        "w_x": ParamDecl((dr, dr), jnp.float32, ("ff", None), "fan_in"),
+        "b_x": ParamDecl((dr,), jnp.float32, (None,), "zeros"),
+        "lambda_p": ParamDecl((dr,), jnp.float32, (None,), "ones"),
+        "out_proj": ParamDecl((dr, d), jnp.float32, ("ff", "d_model"), "fan_in"),
+    }
+
+
+def _gates(p, x):
+    """x: (..., dr) → (a, gated_in) in f32."""
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x, p["w_a"].astype(x.dtype))
+                       .astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x, p["w_x"].astype(x.dtype))
+                       .astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lambda_p"]) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, mult * i * x.astype(jnp.float32)
+
+
+def rglru_apply(p, x, ctx: ShardCtx, cfg, meta):
+    """x: (B, S, d) → (y, cache|None)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,de->bse", x, cast(p["gate_proj"], x.dtype))
+    )
+    u = jnp.einsum("bsd,de->bse", x, cast(p["rec_proj"], x.dtype))
+    u = ctx.shard(u, ("batch", "seq", "ff"))
+    u, conv_tail = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    a, b = _gates(p, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", h * gate, cast(p["out_proj"], x.dtype))
+    y = ctx.shard(y, ("batch", "seq", None))
+    cache = None
+    if ctx.make_cache:
+        cache = {"h": h[:, -1].astype(jnp.float32), "conv_tail": conv_tail}
+    return y, cache
+
+
+def rglru_decode(p, x, cache, ctx: ShardCtx, cfg, meta):
+    """Single step: x (B, 1, d)."""
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,de->bse", x, cast(p["gate_proj"], x.dtype))
+    )
+    u = jnp.einsum("bsd,de->bse", x, cast(p["rec_proj"], x.dtype))
+    u, conv_tail = causal_conv1d(u, p["conv_w"], p["conv_b"],
+                                 tail=cache["conv_tail"])
+    a, b = _gates(p, u)  # (B,1,dr)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    y = jnp.einsum("bse,ed->bsd",
+                   h[:, None].astype(x.dtype) * gate,
+                   cast(p["out_proj"], x.dtype))
+    return y, {"h": h, "conv_tail": conv_tail}

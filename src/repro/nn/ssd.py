@@ -1,0 +1,176 @@
+"""Mamba-2 mixer: State Space Duality (SSD), chunked algorithm.
+
+Faithful to the paper's reference recurrence
+    h_t = exp(dt_t·A) h_{t-1} + dt_t · B_t ⊗ x_t,   y_t = C_t·h_t + D·x_t
+evaluated chunk-wise (quadratic within a Q-token chunk via the decay
+matrix L, linear across chunks via a scanned state), which is the
+arrangement that maps onto MXU matmuls.  Includes the depthwise causal
+conv1d (width 4) over the xBC stream — a literal FIR filter bank, with an
+optional BLMAC bit-layer evaluation path for quantized serving
+(DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDecl, ShardCtx, cast
+
+
+def ssd_decls(cfg) -> dict:
+    d_in = cfg.ssm_heads * cfg.ssm_head_dim
+    n, g = cfg.ssm_state, 1  # single B/C group
+    conv_ch = d_in + 2 * g * n
+    return {
+        "in_proj": ParamDecl(
+            (cfg.d_model, 2 * d_in + 2 * g * n + cfg.ssm_heads), jnp.float32,
+            ("d_model", "heads_flat"), "fan_in"),
+        "conv_w": ParamDecl((cfg.conv_width, conv_ch), jnp.float32,
+                            (None, "heads_flat"), "fan_in"),
+        "conv_b": ParamDecl((conv_ch,), jnp.float32, ("heads_flat",), "zeros"),
+        "a_log": ParamDecl((cfg.ssm_heads,), jnp.float32, ("heads",), "zeros"),
+        "dt_bias": ParamDecl((cfg.ssm_heads,), jnp.float32, ("heads",), "zeros"),
+        "d_skip": ParamDecl((cfg.ssm_heads,), jnp.float32, ("heads",), "ones"),
+        "norm_scale": ParamDecl((d_in,), jnp.float32, ("heads_flat",), "ones"),
+        "out_proj": ParamDecl((d_in, cfg.d_model), jnp.float32,
+                              ("heads_flat", "d_model"), "fan_in"),
+    }
+
+
+def causal_conv1d(x, w, b, tail=None):
+    """Depthwise causal conv.  x: (B, S, Ch), w: (W, Ch).  ``tail`` is the
+    (B, W-1, Ch) history for decode continuity; zeros when None."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * cast(w[i], x.dtype) for i in range(width)
+    )
+    return jax.nn.silu(y + cast(b, x.dtype)), xp[:, -(width - 1):]
+
+
+def blmac_conv1d(x, trits, exponent, b, tail=None):
+    """BLMAC bit-layer evaluation of the same conv: weights are CSD trit
+    planes (L, W, Ch) in {-1,0,+1}; one masked add per plane·tap — no
+    weight multiplies (serving path for quantized checkpoints)."""
+    n_layers, width, ch = trits.shape
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    s = x.shape[1]
+    acc = jnp.zeros_like(x, dtype=jnp.float32)
+    for layer in range(n_layers - 1, -1, -1):  # MSB → LSB (Eq. 2)
+        acc = acc * 2.0
+        for i in range(width):
+            t = trits[layer, i]  # (Ch,) in {-1,0,1}
+            contrib = jnp.where(t == 0, 0.0,
+                                jnp.where(t > 0, 1.0, -1.0)) * xp[:, i : i + s].astype(jnp.float32)
+            acc = acc + contrib
+    y = acc * (2.0 ** float(-exponent)) + cast(b, jnp.float32)
+    return jax.nn.silu(y).astype(x.dtype), xp[:, -(width - 1):]
+
+
+def _split(p, x, cfg):
+    d_in = cfg.ssm_heads * cfg.ssm_head_dim
+    n = cfg.ssm_state
+    zxbcdt = jnp.einsum("bsd,de->bse", x, cast(p["in_proj"], x.dtype))
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def _gated_norm(p, y, z, eps=1e-6):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    return (gf * jax.lax.rsqrt(var + eps) * p["norm_scale"]).astype(y.dtype)
+
+
+def ssd_apply(p, x, ctx: ShardCtx, cfg, meta, chunk: int | None = None):
+    """Full-sequence SSD.  Returns (y, cache|None) where cache carries the
+    final SSM state and conv tail for decode continuation."""
+    bsz, s, _ = x.shape
+    if chunk is None:
+        chunk = cfg.ssm_chunk
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * pdim
+    z, xbc, dt = _split(p, x, cfg)
+    xbc, conv_tail = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in].reshape(bsz, s, h, pdim)
+    bmat = xbc[..., d_in : d_in + n][:, :, None, :]  # (B,S,1,N) group=1
+    cmat = xbc[..., d_in + n :][:, :, None, :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    da = dt * a  # (B,S,H) ≤ 0
+
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+    causal = jnp.tril(jnp.ones((q, q), bool))[None, :, :, None]
+    bmat2 = bmat[:, :, 0, :]
+    cmat2 = cmat[:, :, 0, :]
+
+    def chunk_body(state, i):
+        # slice chunks IN PLACE (§Perf C3): scan-major xs (swapaxes) would
+        # materialize a transposed copy of every activation per step
+        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * q, q, axis=1)
+        xc, dtc, dac, bc, cc = sl(xs), sl(dt), sl(da), sl(bmat2), sl(cmat2)
+        cs = jnp.cumsum(dac, axis=1)  # (B,Q,H) f32, ≤ 0
+        # intra-chunk: L[i,j] = exp(cs_i − cs_j) for i ≥ j
+        li = cs[:, :, None, :] - cs[:, None, :, :]  # (B,Qi,Qj,H)
+        decay = jnp.where(causal, jnp.exp(li), 0.0).astype(xc.dtype)
+        cb = jnp.einsum("bin,bjn->bij", cc, bc)[..., None]
+        w_ij = cb * decay * dtc.astype(xc.dtype)[:, None, :, :]
+        y_diag = jnp.einsum("bijh,bjhp->bihp", w_ij, xc)
+        # contribution of the state entering the chunk
+        y_off = jnp.einsum("bqn,bqh,bhnp->bqhp",
+                           cc, jnp.exp(cs).astype(xc.dtype), state)
+        # chunk-final state
+        decay_end = jnp.exp(cs[:, -1:, :] - cs)  # (B,Q,H)
+        sb = jnp.einsum("bqh,bqn,bqhp->bhnp",
+                        (dtc * decay_end).astype(xc.dtype), bc, xc)
+        chunk_decay = jnp.exp(cs[:, -1, :]).astype(state.dtype)  # (B,H)
+        new_state = state * chunk_decay[:, :, None, None] + sb
+        return new_state, y_diag + y_off  # (B,Q,H,P)
+
+    init = jnp.zeros((bsz, h, n, pdim), x.dtype)
+    final_state, y_chunks = jax.lax.scan(chunk_body, init, jnp.arange(nc))
+    y = y_chunks.swapaxes(0, 1).reshape(bsz, s, h, pdim)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(x.dtype)
+    y = _gated_norm(p, y.reshape(bsz, s, d_in), z)
+    out = jnp.einsum("bse,ed->bsd", y, cast(p["out_proj"], x.dtype))
+    out = ctx.shard(out, ("batch", "seq", None))
+    cache = None
+    if ctx.make_cache:
+        cache = {"state": final_state, "conv_tail": conv_tail}
+    return out, cache
+
+
+def ssd_decode(p, x, cache, ctx: ShardCtx, cfg, meta):
+    """Single-step recurrence.  x: (B, 1, d)."""
+    bsz = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_in = h * pdim
+    z, xbc, dt = _split(p, x, cfg)
+    xbc, conv_tail = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                   tail=cache["conv_tail"])
+    xs = xbc[:, 0, :d_in].reshape(bsz, h, pdim)
+    bvec = xbc[:, 0, d_in : d_in + n]
+    cvec = xbc[:, 0, d_in + n :]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt * a).astype(x.dtype)  # (B,H)
+    state = cache["state"] * decay[:, :, None, None]
+    state = state + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt.astype(x.dtype), bvec, xs
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cvec, state)
+    y = y + xs * p["d_skip"][None, :, None].astype(x.dtype)
+    y = _gated_norm(p, y.reshape(bsz, 1, d_in), z)
+    out = jnp.einsum("bse,ed->bsd", y, cast(p["out_proj"], x.dtype))
+    return out, {"state": state, "conv_tail": conv_tail}

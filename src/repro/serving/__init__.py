@@ -1,0 +1,5 @@
+from .engine import (ServeEngine, abstract_caches, cache_pspecs,
+                     make_decode_fn, make_prefill_fn)
+
+__all__ = ["ServeEngine", "abstract_caches", "cache_pspecs",
+           "make_decode_fn", "make_prefill_fn"]

@@ -1,0 +1,172 @@
+"""Serving: prefill + decode steps and a batched greedy engine.
+
+Caches are the per-stage stacked trees produced by the scanned prefill;
+decode scans over (stage params, stage cache) in lock-step.  Variable
+prompt lengths are supported for attention archs by voiding the cache
+positions past each prompt (pos = −1 ⇒ masked); recurrent archs (ssd /
+rglru) require equal-length prompts — their state cannot be position-
+masked after the fact (documented limitation; continuous batching is the
+production fix).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.common import ShardCtx
+from ..nn.model import decode_step as _decode_step
+from ..nn.model import forward
+
+
+def make_prefill_fn(cfg, cache_len: int, mesh=None, rules=None):
+    recurrent = any(k in ("ssd", "rglru") for k in cfg.block_pattern)
+
+    def prefill(params, batch):
+        leaf = batch.get("tokens", batch.get("embeds"))
+        b, s = leaf.shape[0], leaf.shape[1]
+        lengths = batch.get("lengths")
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if lengths is not None and not recurrent:
+            pos = jnp.where(pos < lengths[:, None], pos, -1)
+            next_pos = lengths.astype(jnp.int32)
+        else:
+            next_pos = jnp.full((b,), s, jnp.int32)
+        ctx = ShardCtx(
+            rules=rules, mesh=mesh, positions=pos,
+            compute_dtype=jnp.dtype(cfg.compute_dtype),
+            make_cache=True, cache_len=cache_len,
+        )
+        logits, _, caches = forward(params, batch, cfg, ctx)
+        return logits, {"caches": caches, "pos": next_pos}
+
+    return prefill
+
+
+def make_decode_fn(cfg, mesh=None, rules=None):
+    def decode(params, batch, state):
+        pos = state["pos"]  # (B,)
+        ctx = ShardCtx(
+            rules=rules, mesh=mesh, positions=pos[:, None],
+            compute_dtype=jnp.dtype(cfg.compute_dtype),
+        )
+        logits, caches = _decode_step(params, batch, state["caches"], ctx, cfg)
+        return logits, {"caches": caches, "pos": pos + 1}
+
+    return decode
+
+
+def abstract_caches(cfg, batch: int, cache_len: int):
+    """ShapeDtypeStruct cache tree matching `forward(make_cache=True)` —
+    the dry-run's decode state, never allocated."""
+    from ..nn.attention import cache_size
+    from ..nn.model import stage_plan
+
+    dt = jnp.dtype(cfg.compute_dtype)
+    sds = jax.ShapeDtypeStruct
+
+    def slot_cache(meta, repeat):
+        b = batch
+        if meta.mixer == "attn":
+            w = cache_size(cache_len, meta.window)
+            hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+            # (B, Hkv, W, Dh): decode-optimized layout (§Perf A4)
+            return {
+                "k": sds((repeat, b, hkv, w, dh), dt),
+                "v": sds((repeat, b, hkv, w, dh), dt),
+                "pos": sds((repeat, b, w), jnp.int32),
+            }
+        if meta.mixer == "mla":
+            return {
+                "c_kv": sds((repeat, b, cache_len, cfg.kv_lora_rank), dt),
+                "k_rope": sds((repeat, b, cache_len, cfg.qk_rope_dim), dt),
+                "pos": sds((repeat, b, cache_len), jnp.int32),
+            }
+        if meta.mixer == "ssd":
+            ch = cfg.ssm_heads * cfg.ssm_head_dim + 2 * cfg.ssm_state
+            return {
+                "state": sds((repeat, b, cfg.ssm_heads, cfg.ssm_state,
+                              cfg.ssm_head_dim), dt),
+                "conv_tail": sds((repeat, b, cfg.conv_width - 1, ch), dt),
+            }
+        # rglru
+        return {
+            "h": sds((repeat, b, cfg.rglru_width), jnp.float32),
+            "conv_tail": sds((repeat, b, cfg.conv_width - 1,
+                              cfg.rglru_width), dt),
+        }
+
+    return [
+        tuple(slot_cache(m, st.repeat) for m in st.metas)
+        for st in stage_plan(cfg)
+    ]
+
+
+def cache_pspecs(cfg, rules):
+    """PartitionSpecs mirroring `abstract_caches`."""
+    from jax.sharding import PartitionSpec as P
+
+    from ..nn.model import stage_plan
+
+    b = rules.get("batch")
+    cs = rules.get("cache_seq")
+    # a mesh axis may appear once per spec: when the cache sequence is
+    # sharded over `model` (SP decode), the kv-head dim must stay replicated
+    cs_axes = set(cs) if isinstance(cs, tuple) else {cs}
+    kvh = rules.get("kv_heads")
+    if kvh in cs_axes:
+        kvh = None
+
+    def slot_spec(meta):
+        if meta.mixer == "attn":
+            return {
+                "k": P(None, b, kvh, cs, None),
+                "v": P(None, b, kvh, cs, None),
+                "pos": P(None, b, cs),
+            }
+        if meta.mixer == "mla":
+            return {
+                "c_kv": P(None, b, cs, None),
+                "k_rope": P(None, b, cs, None),
+                "pos": P(None, b, cs),
+            }
+        if meta.mixer == "ssd":
+            return {
+                "state": P(None, b, rules.get("heads"), None, None),
+                "conv_tail": P(None, b, None, rules.get("heads_flat")),
+            }
+        return {
+            "h": P(None, b, rules.get("ff")),
+            "conv_tail": P(None, b, None, rules.get("ff")),
+        }
+
+    return [
+        tuple(slot_spec(m) for m in st.metas) for st in stage_plan(cfg)
+    ]
+
+
+class ServeEngine:
+    """Minimal batched greedy engine over the prefill/decode steps."""
+
+    def __init__(self, cfg, params, cache_len: int = 4096,
+                 mesh=None, rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self._prefill = jax.jit(make_prefill_fn(cfg, cache_len, mesh, rules))
+        self._decode = jax.jit(make_decode_fn(cfg, mesh, rules))
+
+    def generate(self, prompts, max_new_tokens: int = 16):
+        """prompts: (B, S) int tokens (equal length).  Greedy argmax."""
+        prompts = jnp.asarray(prompts, jnp.int32)
+        logits, state = self._prefill(self.params, {"tokens": prompts})
+        tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        out = [tok]
+        for _ in range(max_new_tokens - 1):
+            logits, state = self._decode(
+                self.params, {"token": tok[:, None]}, state)
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out.append(tok)
+        return jnp.stack(out, axis=1)  # (B, max_new_tokens)

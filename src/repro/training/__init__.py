@@ -1,0 +1,6 @@
+from .optimizer import OptHParams, make_optimizer, schedule, global_norm
+from .train_step import TrainHParams, make_train_step, train_state_init, make_positions
+
+__all__ = ["OptHParams", "make_optimizer", "schedule", "global_norm",
+           "TrainHParams", "make_train_step", "train_state_init",
+           "make_positions"]

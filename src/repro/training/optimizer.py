@@ -1,0 +1,151 @@
+"""Optimizers, built in-tree (no optax in this environment): AdamW with
+fp32 moments, and factored Adafactor for the huge MoE archs where full
+second moments don't fit HBM (DESIGN.md §5; deepseek-v3 uses it).
+States are pytrees mirroring the params, so they shard with the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptHParams:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    min_lr_ratio: float = 0.1
+
+
+def schedule(hp: OptHParams, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(hp.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - hp.warmup_steps) / jnp.maximum(hp.total_steps - hp.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    decay = hp.min_lr_ratio + (1 - hp.min_lr_ratio) * cos
+    return hp.learning_rate * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    factor = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * factor).astype(x.dtype), tree
+    ), g
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def adamw_update(grads, state, params, step, hp: OptHParams):
+    lr = schedule(hp, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1 - hp.b1 ** t
+    bc2 = 1 - hp.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = hp.b1 * m + (1 - hp.b1) * g
+        v = hp.b2 * v + (1 - hp.b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + hp.eps)
+        u = u + hp.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment) — memory ~0 extra
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params):
+    def fac(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree_util.tree_map(fac, params,
+                                        is_leaf=lambda x: hasattr(x, "ndim"))}
+
+
+def adafactor_update(grads, state, params, step, hp: OptHParams):
+    lr = schedule(hp, step)
+    decay = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * g2.mean(axis=-1)
+            vc = decay * f["vc"] + (1 - decay) * g2.mean(axis=-2)
+            denom = (
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(vr.mean(axis=-1)[..., None, None], 1e-30)
+            )
+            u = g / jnp.sqrt(denom + 1e-30)
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            u = g / jnp.sqrt(v + 1e-30)
+            nf = {"v": v}
+        # update clipping (RMS ≤ 1), as in the Adafactor paper
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        u = u + hp.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), nf
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_f = treedef.flatten_up_to(state["f"])
+    out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+    return treedef.unflatten([o[0] for o in out]), {
+        "f": treedef.unflatten([o[1] for o in out])
+    }
+
+
+def make_optimizer(name: str) -> tuple[Callable, Callable]:
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise ValueError(f"unknown optimizer {name!r}")

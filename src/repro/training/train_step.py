@@ -1,0 +1,128 @@
+"""The jitted train step: microbatched grads → clip → optimizer update.
+
+Built for the pjit path: params/opt-state carry NamedShardings derived
+from the declaration tree; activations are constrained inside the model;
+XLA SPMD places the DP/FSDP/TP/EP collectives.  Gradient accumulation is
+a `lax.scan` over microbatches (sequential, checkpointed).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..nn.common import ShardCtx
+from ..nn.model import loss_fn
+from .optimizer import OptHParams, clip_by_global_norm, make_optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    opt: OptHParams = OptHParams()
+    grad_accum: int = 1
+    z_loss: float = 1e-4
+
+
+def train_state_init(params, cfg):
+    opt_init, _ = make_optimizer(cfg.optimizer)
+    return {"params": params, "opt": opt_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(cfg, decls):
+    """ShapeDtypeStruct train state — feeds jit(...).lower() without ever
+    allocating the (possibly 671B-param) model."""
+    from ..nn.common import abstract_params
+
+    aparams = abstract_params(decls, jnp.dtype(cfg.param_dtype))
+    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    if cfg.optimizer == "adamw":
+        moments = jax.tree_util.tree_map(lambda p: sds(p.shape), aparams)
+        opt = {"m": moments, "v": moments}
+    else:  # adafactor
+        def fac(p):
+            if len(p.shape) >= 2:
+                return {"vr": sds(p.shape[:-1]),
+                        "vc": sds(p.shape[:-2] + p.shape[-1:])}
+            return {"v": sds(p.shape)}
+
+        opt = {"f": jax.tree_util.tree_map(fac, aparams)}
+    return {"params": aparams, "opt": opt,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def train_state_pspecs(cfg, decls, rules):
+    """PartitionSpec tree mirroring `abstract_train_state`."""
+    from jax.sharding import PartitionSpec
+    from ..nn.common import param_pspecs
+
+    pspecs = param_pspecs(decls, rules)
+    is_spec = lambda x: isinstance(x, PartitionSpec)
+    if cfg.optimizer == "adamw":
+        opt = {"m": pspecs, "v": pspecs}
+    else:
+        def fac(s):
+            entries = list(s)
+            if len(entries) >= 2:
+                return {"vr": PartitionSpec(*entries[:-1]),
+                        "vc": PartitionSpec(*entries[:-2], entries[-1])}
+            return {"v": s}
+
+        opt = {"f": jax.tree_util.tree_map(fac, pspecs, is_leaf=is_spec)}
+    return {"params": pspecs, "opt": opt, "step": PartitionSpec()}
+
+
+def make_positions(batch) -> jax.Array:
+    leaf = batch.get("tokens", batch.get("embeds"))
+    b, s = leaf.shape[0], leaf.shape[1]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def make_train_step(cfg, hp: TrainHParams, mesh=None, rules=None):
+    _, opt_update = make_optimizer(cfg.optimizer)
+
+    def compute_loss(params, batch):
+        ctx = ShardCtx(
+            rules=rules, mesh=mesh, positions=make_positions(batch),
+            compute_dtype=jnp.dtype(cfg.compute_dtype),
+        )
+        return loss_fn(params, batch, cfg, ctx)
+
+    grad_fn = jax.value_and_grad(compute_loss, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.grad_accum > 1:
+            def micro(carry, mb):
+                (loss_a, metrics_a, grads_a) = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                grads_a = jax.tree_util.tree_map(jnp.add, grads_a, grads)
+                metrics_a = jax.tree_util.tree_map(jnp.add, metrics_a, metrics)
+                return (loss_a + loss, metrics_a, grads_a), None
+
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape((hp.grad_accum, x.shape[0] // hp.grad_accum)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zeros_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros_m = {"xent": 0.0, "zloss": 0.0, "aux": 0.0}
+            (loss, metrics, grads), _ = jax.lax.scan(
+                micro, (jnp.float32(0.0), zeros_m, zeros_g), mbs)
+            inv = 1.0 / hp.grad_accum
+            loss = loss * inv
+            grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.opt.grad_clip)
+        new_params, new_opt = opt_update(
+            grads, state["opt"], params, state["step"], hp.opt)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step

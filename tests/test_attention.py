@@ -1,0 +1,68 @@
+"""Chunked online-softmax attention vs a naive reference, all variants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn.attention import build_kv_cache, chunked_attention
+
+
+def naive(q, k, v, q_pos, kv_pos, scale, window=0, softcap=None):
+    b, sq, h, d = q.shape
+    _, skv, hkv, dv = v.shape
+    g = h // hkv
+    kf = np.repeat(np.asarray(k), g, axis=2)
+    vf = np.repeat(np.asarray(v), g, axis=2)
+    s = np.einsum("bqhd,bchd->bhqc", np.asarray(q, np.float64),
+                  kf.astype(np.float64)) * scale
+    if softcap:
+        s = softcap * np.tanh(s / softcap)
+    qp = np.asarray(q_pos)[:, None, :, None]
+    kp = np.asarray(kv_pos)[:, None, None, :]
+    ok = (kp <= qp) & (kp >= 0)
+    if window > 0:
+        ok &= qp - kp < window
+    s = np.where(ok, s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = np.where(ok, p, 0.0)
+    p = p / np.maximum(p.sum(-1, keepdims=True), 1e-30)
+    return np.einsum("bhqc,bchv->bqhv", p, vf.astype(np.float64))
+
+
+@pytest.mark.parametrize("window", [0, 7])
+@pytest.mark.parametrize("softcap", [None, 20.0])
+@pytest.mark.parametrize("triangular", [False, True])
+@pytest.mark.parametrize("hkv", [1, 2, 4])
+def test_self_attention_variants(window, softcap, triangular, hkv):
+    rng = np.random.default_rng(window * 31 + hkv)
+    b, s, h, d = 2, 32, 4, 8
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    out = chunked_attention(q, k, v, pos, pos, scale=d ** -0.5,
+                            window=window, softcap=softcap, kv_chunk=8,
+                            triangular=triangular)
+    ref = naive(q, k, v, pos, pos, d ** -0.5, window, softcap)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-5)
+
+
+def test_ring_cache_masks_by_absolute_position():
+    """A rotated ring cache must attend identically to a fresh cache."""
+    rng = np.random.default_rng(0)
+    b, s, hkv, d, w = 1, 12, 1, 4, 8
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    cache = build_kv_cache(k, v, pos, cache_len=64, window=w)
+    # the ring holds the LAST w positions, slot = pos % w
+    kept = np.sort(np.asarray(cache["pos"][0]))
+    assert np.array_equal(kept, np.arange(s - w, s))
+    assert cache["k"].shape == (b, hkv, w, d)  # decode-optimized layout
+    q = jnp.asarray(rng.standard_normal((b, 1, 2, d)), jnp.float32)
+    qp = jnp.full((b, 1), s - 1, jnp.int32)
+    out_ring = chunked_attention(q, cache["k"], cache["v"], qp, cache["pos"],
+                                 scale=0.5, window=w, kv_chunk=8,
+                                 kv_layout="bhsd")
+    ref = naive(q, k, v, qp, pos, 0.5, window=w)
+    np.testing.assert_allclose(np.asarray(out_ring), ref, rtol=2e-4, atol=2e-5)

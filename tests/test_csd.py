@@ -1,0 +1,69 @@
+"""Property tests for the CSD/NAF codec — the paper's §2 core."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (csd_decode, csd_digits, csd_truncate, max_pulses,
+                        num_pulses, pack_trits, unpack_trits)
+
+
+@given(st.lists(st.integers(-2**40, 2**40), min_size=1, max_size=50))
+@settings(max_examples=200, deadline=None)
+def test_roundtrip(vals):
+    w = np.asarray(vals, np.int64)
+    assert np.array_equal(csd_decode(csd_digits(w)), w)
+
+
+@given(st.integers(0, 2**24 - 1))
+@settings(max_examples=300, deadline=None)
+def test_pulse_bound(v):
+    """NAF uses at most ⌈(n+1)/2⌉ pulses for an n-bit magnitude (Tab. 3)."""
+    n = max(1, int(v).bit_length())
+    assert num_pulses(np.asarray([v]))[0] <= max_pulses(n)
+
+
+@given(st.integers(1, 2**30))
+@settings(max_examples=200, deadline=None)
+def test_nonadjacent(v):
+    d = csd_digits(np.asarray([v]))[0]
+    nz = d != 0
+    assert not np.any(nz[:-1] & nz[1:]), "NAF must have no adjacent pulses"
+
+
+@given(st.integers(-2**30, 2**30))
+@settings(max_examples=200, deadline=None)
+def test_sign_symmetry(v):
+    assert num_pulses(np.asarray([v]))[0] == num_pulses(np.asarray([-v]))[0]
+
+
+@given(st.integers(1, 2**20), st.integers(1, 6))
+@settings(max_examples=200, deadline=None)
+def test_truncate_bound(v, planes):
+    """Keeping P pulses bounds the error by 2^(e - 2P + 2) (NAF pulses
+    descend ≥ 2 positions per step)."""
+    t = csd_truncate(np.asarray([v]), planes)[0]
+    assert num_pulses(np.asarray([abs(t)]))[0] <= planes
+    e = int(v).bit_length()
+    assert abs(v - t) < 2.0 ** max(e - 2 * planes + 2, 0)
+
+
+@given(st.lists(st.integers(-1, 1), min_size=1, max_size=100))
+@settings(max_examples=200, deadline=None)
+def test_pack_roundtrip(trits):
+    t = np.asarray(trits, np.int8)
+    assert np.array_equal(unpack_trits(pack_trits(t), t.shape[-1]), t)
+
+
+def test_paper_table3_small():
+    """Exact agreement with the paper's Tab. 3 for 1..16 bits."""
+    paper_avg = [0.5, 1.0, 1.37, 1.75, 2.09, 2.44, 2.77, 3.11, 3.44, 3.77,
+                 4.11, 4.44, 4.78, 5.11, 5.44, 5.77]
+    paper_max = [1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9]
+    for n in range(1, 17):
+        p = num_pulses(np.arange(1 << n))
+        assert abs(p.mean() - paper_avg[n - 1]) < 0.01, n
+        assert p.max() == paper_max[n - 1], n
+
+
+def test_ntrits_paper_example():
+    assert num_pulses(np.asarray([118]))[0] == 3  # 118 = (1,0,0,0,-1,0)

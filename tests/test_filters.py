@@ -1,0 +1,70 @@
+"""FIR designer vs scipy; the paper's sweep and quantization (§3.1–§3.2)."""
+import numpy as np
+import pytest
+import scipy.signal as ss
+from hypothesis import given, settings, strategies as st
+
+from repro.core import po2_quantize, po2_quantize_batch, fir_blmac_additions
+from repro.filters import (design_bank, fir_bit_layers, fir_direct,
+                           fir_symmetric, sweep_bank, sweep_specs)
+
+
+@pytest.mark.parametrize("window,swindow", [
+    ("hamming", "hamming"), (("kaiser", 8.0), ("kaiser", 8.0))])
+@pytest.mark.parametrize("kind,cut,kw", [
+    ("lowpass", 0.3, dict(cutoff=0.3, pass_zero=True)),
+    ("highpass", 0.4, dict(cutoff=0.4, pass_zero=False)),
+    ("bandpass", (0.2, 0.5), dict(cutoff=[0.2, 0.5], pass_zero=False)),
+    ("bandstop", (0.25, 0.6), dict(cutoff=[0.25, 0.6], pass_zero=True))])
+def test_firwin_matches_scipy(window, swindow, kind, cut, kw):
+    for taps in (55, 91, 255):
+        ours = design_bank(taps, [(kind, cut)], window)[0]
+        theirs = ss.firwin(taps, window=swindow, **kw)
+        np.testing.assert_allclose(ours, theirs, atol=1e-12)
+
+
+def test_sweep_population():
+    specs = sweep_specs(10)
+    assert len(specs) == 90  # N(N-1)
+    kinds = [s.kind for s in specs]
+    assert kinds.count("lowpass") == 9
+    assert kinds.count("bandpass") == 9 * 8 // 2
+
+
+def test_po2_quantize_fills_range():
+    """§3.2: the largest coefficient must truly need 16 bits."""
+    bank = sweep_bank(55, 12)
+    q, k = po2_quantize_batch(bank, 16)
+    assert q.max() <= 32767 and q.min() >= -32768
+    assert (np.abs(q).max(axis=1) >= 16384).all()  # top bit used
+
+
+def test_po2_single_matches_batch():
+    bank = sweep_bank(55, 8)
+    qb, kb = po2_quantize_batch(bank, 16)
+    for i in range(0, len(bank), 7):
+        q, k = po2_quantize(bank[i], 16)
+        assert k == kb[i]
+        assert np.array_equal(q, qb[i])
+
+
+@given(st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_application_paths_bit_exact(seed):
+    rng = np.random.default_rng(seed)
+    taps = int(rng.choice([7, 25, 55]))
+    half = rng.integers(-32768, 32768, taps // 2 + 1)
+    w = np.concatenate([half[:-1], half[-1:], half[:-1][::-1]])
+    x = rng.integers(-128, 128, taps + 100)
+    y = fir_direct(x, w)
+    assert np.array_equal(y, fir_symmetric(x, w))
+    assert np.array_equal(y, fir_bit_layers(x, w))
+    assert np.array_equal(y, fir_bit_layers(x, w, symmetric=False))
+
+
+def test_additions_count_matches_paper_example_scale():
+    bank = sweep_bank(127, 12, "hamming")
+    q, _ = po2_quantize_batch(bank, 16)
+    adds = [fir_blmac_additions(row) for row in q]
+    # Fig. 3 neighbourhood for N=127: ~230-320 additions on average
+    assert 200 < np.mean(adds) < 350

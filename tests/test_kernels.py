@@ -1,0 +1,89 @@
+"""Pallas kernels vs their jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import po2_quantize
+from repro.filters import design_bank, fir_direct
+from repro.kernels import (blmac_fir, pulse_dequantize, pulse_matmul_op,
+                           pulse_quantize)
+from repro.kernels.ref import blmac_fir_ref, fir_direct_ref, pulse_decode_ref
+
+
+@pytest.mark.parametrize("taps", [7, 55, 127])
+@pytest.mark.parametrize("n", [300, 2500])
+@pytest.mark.parametrize("dtype", [np.int8, np.int16, np.int32])
+@pytest.mark.parametrize("specialize", [True, False])
+def test_blmac_fir_sweep(taps, n, dtype, specialize):
+    rng = np.random.default_rng(taps * n)
+    cut = 0.2 + 0.5 * rng.random()
+    h = design_bank(taps, [("lowpass", float(cut))])[0]
+    q, _ = po2_quantize(h, 16)
+    # paper §2.1 regime: sample VALUES stay 8-bit (dtype is storage);
+    # 16b coeffs × 8b samples × ≤255 taps fits the int32 accumulator
+    x = rng.integers(-128, 128, size=n).astype(dtype)
+    y = blmac_fir(jnp.asarray(x), q, specialize=specialize, tile=512)
+    expect = fir_direct(x.astype(np.int64), q)
+    assert np.array_equal(np.asarray(y), expect)
+
+
+def test_blmac_fir_refs_agree():
+    rng = np.random.default_rng(0)
+    h = design_bank(63, [("bandpass", (0.25, 0.7))])[0]
+    q, _ = po2_quantize(h, 16)
+    x = jnp.asarray(rng.integers(-128, 128, 700), jnp.int32)
+    a = blmac_fir_ref(x, q)
+    b = fir_direct_ref(x, q)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_blmac_fir_rejects_asymmetric():
+    with pytest.raises(ValueError):
+        blmac_fir(jnp.zeros(100, jnp.int32), np.arange(31))
+
+
+@pytest.mark.parametrize("planes", [1, 2, 4])
+@pytest.mark.parametrize("k,n,m", [(128, 128, 8), (512, 256, 16), (256, 384, 4)])
+def test_pulse_matmul_sweep(planes, k, n, m):
+    rng = np.random.default_rng(planes * k + n)
+    w = rng.standard_normal((k, n)) * np.exp2(rng.integers(-8, 8, (k, n)))
+    codes, ge = pulse_quantize(w, planes)
+    wd = pulse_dequantize(codes, ge)
+    x = rng.standard_normal((m, k)).astype(np.float32)
+    y_kern = pulse_matmul_op(jnp.asarray(x), jnp.asarray(codes),
+                             jnp.asarray(ge), planes, bm=max(1, m // 2),
+                             bk=128, bn=128)
+    y_ref = x @ wd
+    scale = np.abs(y_ref).max() + 1e-9
+    assert np.abs(np.asarray(y_kern) - y_ref).max() / scale < 1e-5
+    # jnp decode oracle agrees with numpy decode
+    wd2 = np.asarray(pulse_decode_ref(jnp.asarray(codes), jnp.asarray(ge)))
+    np.testing.assert_allclose(wd2, wd, rtol=1e-6)
+
+
+def test_pulse_quantize_error_decreases_with_planes():
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((256, 64))
+    errs = []
+    for p in (1, 2, 3, 4):
+        codes, ge = pulse_quantize(w, p)
+        errs.append(np.abs(pulse_dequantize(codes, ge) - w).mean())
+    assert errs == sorted(errs, reverse=True)
+    assert errs[3] < 0.01 * np.abs(w).mean()
+
+
+def test_pulse_quantize_exact_for_po2_weights():
+    """P=1 is exact when weights ARE signed powers of two (paper's
+    variable-precision claim in its purest form)."""
+    rng = np.random.default_rng(2)
+    w = np.exp2(rng.integers(-6, 6, (64, 32)).astype(np.float64))
+    w *= rng.choice([-1.0, 1.0], w.shape)
+    codes, ge = pulse_quantize(w, 1)
+    np.testing.assert_allclose(pulse_dequantize(codes, ge), w, rtol=0)
+
+
+def test_zero_column_group():
+    w = np.zeros((64, 8))
+    codes, ge = pulse_quantize(w, 2)
+    assert np.abs(pulse_dequantize(codes, ge)).max() == 0.0

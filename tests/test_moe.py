@@ -1,0 +1,68 @@
+"""MoE dispatch correctness against a brute-force reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.nn.common import ShardCtx, init_params
+from repro.nn.moe import _positions_in_expert, moe_apply, moe_decls
+
+
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=200))
+@settings(max_examples=100, deadline=None)
+def test_positions_in_expert(ids):
+    e = np.asarray(ids)
+    pos = np.asarray(_positions_in_expert(jnp.asarray(e), 8))
+    # each expert's positions must be 0..count-1 in order of appearance
+    for ex in range(8):
+        got = pos[e == ex]
+        assert np.array_equal(got, np.arange(len(got)))
+
+
+def _dense_reference(p, x, cfg):
+    """Compute routed MoE exactly: every token through its top-k experts."""
+    t, d = x.shape
+    logits = x @ np.asarray(p["router"])
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    order = np.argsort(-probs, axis=-1)[:, : cfg.experts_per_token]
+    w = np.take_along_axis(probs, order, axis=-1)
+    w /= w.sum(-1, keepdims=True) + 1e-9
+    y = np.zeros_like(x)
+    for ti in range(t):
+        for kk in range(cfg.experts_per_token):
+            e = order[ti, kk]
+            g = x[ti] @ np.asarray(p["gate"][e])
+            u = x[ti] @ np.asarray(p["up"][e])
+            h = (g / (1 + np.exp(-g))) * u
+            y[ti] += w[ti, kk] * (h @ np.asarray(p["down"][e]))
+    return y
+
+
+def test_moe_matches_dense_reference():
+    cfg = get_config("mixtral-8x22b").reduced(
+        d_model=32, moe_d_ff=16, n_experts=4, experts_per_token=2,
+        capacity_factor=64.0)
+    p = init_params(moe_decls(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((1, 24, 32)).astype(np.float32)
+    ctx = ShardCtx(compute_dtype=jnp.float32)
+    y, aux = jax.jit(lambda p, x: moe_apply(p, x, ctx, cfg))(p, jnp.asarray(x))
+    y_ref = _dense_reference(p, x[0], cfg)
+    np.testing.assert_allclose(np.asarray(y)[0], y_ref, rtol=2e-4, atol=2e-4)
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = get_config("mixtral-8x22b").reduced(
+        d_model=32, moe_d_ff=16, n_experts=4, experts_per_token=2,
+        capacity_factor=0.10)  # almost everything dropped
+    p = init_params(moe_decls(cfg), jax.random.key(0))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 64, 32)), jnp.float32)
+    ctx = ShardCtx(compute_dtype=jnp.float32)
+    y, _ = jax.jit(lambda p, x: moe_apply(p, x, ctx, cfg))(p, x)
+    # dropped tokens produce zero routed output; norm far below no-drop run
+    assert float(jnp.abs(y).mean()) < 0.5

@@ -1,0 +1,84 @@
+"""The §2.4 RLE weight programs and the §4 dot-product machine testbench."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (csd_digits, decode_codes, encode_digits,
+                        po2_quantize)
+from repro.core.machine import FirBlmacMachine, MachineSpec
+from repro.filters import design_bank, fir_direct
+
+
+@given(st.lists(st.integers(-32768, 32767), min_size=4, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_rle_roundtrip(ws):
+    d = csd_digits(np.asarray(ws, np.int64), 16)
+    st_ = encode_digits(d)
+    assert np.array_equal(decode_codes(st_), d)
+    assert st_.n_codes == np.count_nonzero(d) + 16
+
+
+def _machine_check(coeffs, seed=0, n_out=64, spec=None):
+    spec = spec or MachineSpec()
+    m = FirBlmacMachine(spec)
+    stream = m.program(coeffs)
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-128, 128, size=spec.taps - 1 + n_out)
+    res = m.run(x)
+    assert np.array_equal(res.outputs, fir_direct(x, coeffs))
+    assert np.array_equal(res.cycles, np.full(n_out, stream.n_codes))
+    return res
+
+
+def test_machine_bit_exact_designed_filters():
+    """The paper's testbench: ~18% of filters overflow the 256-code weight
+    memory and are skipped; every filter that fits must be bit-exact."""
+    bank = design_bank(127, [("lowpass", 0.23), ("highpass", 0.61),
+                             ("bandpass", (0.2, 0.5)), ("bandstop", (0.3, 0.8))])
+    verified = 0
+    for h in bank:
+        q, _ = po2_quantize(h, 16)
+        try:
+            _machine_check(q)
+            verified += 1
+        except ValueError as e:
+            assert "weight memory" in str(e)
+    assert verified >= 2
+
+
+def test_machine_extreme_coefficients():
+    w = np.zeros(127, np.int64)
+    w[63] = 32767  # centre tap at int16 max
+    _machine_check(w)
+    w2 = np.zeros(127, np.int64)
+    w2[0] = w2[126] = -32768
+    w2[63] = 1
+    _machine_check(w2)
+
+
+def test_weight_memory_overflow_raises():
+    rng = np.random.default_rng(3)
+    half = rng.integers(-32768, 32768, 64)
+    w = np.concatenate([half[:63], half[63:64], half[:63][::-1]])
+    m = FirBlmacMachine(MachineSpec(weight_mem_codes=64))
+    with pytest.raises(ValueError, match="weight memory"):
+        m.program(w)
+
+
+def test_fused_last_add_saves_cycles():
+    bank = design_bank(127, [("lowpass", 0.3)])
+    q, _ = po2_quantize(bank[0], 16)
+    base = _machine_check(q)
+    fused = FirBlmacMachine(MachineSpec(fused_last_add=True))
+    fused.program(q)
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, size=127 - 1 + 64)
+    res = fused.run(x)
+    assert np.array_equal(res.outputs, base.outputs)
+    assert res.cycles[0] < base.cycles[0]  # §4: "reduce ... by 16"
+
+
+def test_type2_rejected():
+    m = FirBlmacMachine()
+    with pytest.raises(ValueError):
+        m.program(np.arange(127))  # not symmetric
