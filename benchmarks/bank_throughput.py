@@ -1,0 +1,230 @@
+"""Filter-bank throughput: batched BLMAC bank kernel vs per-filter loop.
+
+For each bank size B the benchmark designs B lowpass filters with spread
+cutoffs, quantizes them to 16 bits, and measures samples/s/filter for
+
+  * ``batched``  — ONE `pallas_call` via `repro.kernels.blmac_fir_bank`
+    (packed-trit operands, one integer matmul per bit layer), and
+  * ``per_filter`` — a Python loop issuing one B=1 bank-kernel call per
+    filter, trits pre-packed outside the timer (the per-filter serving
+    pattern the bank replaces: compiled once, dispatched/framed B times —
+    what `blmac_fir_dynamic` does per call, minus its host-side packing,
+    so the measured gap is batching, not host overhead).
+
+Outputs are cross-checked bit-exactly against
+`repro.filters.fir_bit_layers_batch` before timing.  Results land in
+``BENCH_fir.json`` at the repo root — the committed copy is the perf
+baseline CI regresses against (>20% drop in batched samples/s/filter
+fails the build; see ``--check``).
+
+Usage:
+  python benchmarks/bank_throughput.py                 # full: B ∈ {1,16,256}
+  python benchmarks/bank_throughput.py --quick         # CI: short signal
+  python benchmarks/bank_throughput.py --check BENCH_fir.json --tolerance 0.2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BANK_SIZES = (1, 16, 256)
+TAPS = 63
+TILE = 512
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_fir.json")
+
+
+def _design_qbank(n_filters: int, taps: int) -> np.ndarray:
+    from repro.core import po2_quantize_batch
+    from repro.filters import design_bank
+
+    cuts = 0.05 + 0.9 * (np.arange(n_filters) + 0.5) / n_filters
+    q, _ = po2_quantize_batch(
+        design_bank(taps, [("lowpass", float(c)) for c in cuts]), 16
+    )
+    return q
+
+
+def _time(fn, repeats: int) -> float:
+    fn()  # warm-up: compile + cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_bank(
+    n_filters: int,
+    n_samples: int,
+    taps: int = TAPS,
+    tile: int = TILE,
+    repeats: int = 3,
+    verbose: bool = True,
+    baseline: bool = True,
+) -> dict:
+    import jax.numpy as jnp
+
+    from repro.filters import fir_bit_layers_batch
+    from repro.kernels.blmac_fir import blmac_fir_bank, pack_bank_trits
+
+    qbank = _design_qbank(n_filters, taps)
+    rng = np.random.default_rng(42)
+    x = rng.integers(-128, 128, n_samples).astype(np.int32)
+    xj = jnp.asarray(x)
+    n_out = n_samples - taps + 1
+
+    # both arms get trit encoding AND packing hoisted out of the timed region
+    packed = pack_bank_trits(qbank)
+    packed_single = [packed[b : b + 1] for b in range(n_filters)]
+
+    # bit-exact check before any timing
+    ref = fir_bit_layers_batch(x, qbank)[:, 0, :]
+    y_bank = np.asarray(blmac_fir_bank(xj, packed, taps, tile=tile))
+    if not np.array_equal(y_bank, ref):
+        raise AssertionError(f"bank kernel mismatch at B={n_filters}")
+
+    def run_batched():
+        blmac_fir_bank(xj, packed, taps, tile=tile).block_until_ready()
+
+    t_batched = _time(run_batched, repeats)
+    row = {
+        "bank_size": n_filters,
+        "n_samples": n_samples,
+        "taps": taps,
+        "tile": tile,
+        "outputs_per_filter": n_out,
+        "batched_s": t_batched,
+        "batched_samples_per_s_per_filter": n_out / t_batched,
+    }
+    if baseline:
+
+        def run_per_filter():
+            ys = [
+                blmac_fir_bank(xj, packed_single[b], taps, tile, bank_tile=1)
+                for b in range(n_filters)
+            ]
+            ys[-1].block_until_ready()
+
+        t_loop = _time(run_per_filter, repeats)
+        row["per_filter_s"] = t_loop
+        row["per_filter_samples_per_s_per_filter"] = n_out / t_loop
+        row["speedup"] = t_loop / t_batched
+    if verbose:
+        per = (f"  per-filter {row['per_filter_samples_per_s_per_filter']:12.0f}"
+               f"  samples/s/filter  speedup {row['speedup']:.2f}x"
+               if baseline else "  samples/s/filter")
+        print(f"B={n_filters:4d}  batched "
+              f"{row['batched_samples_per_s_per_filter']:12.0f}{per}")
+    return row
+
+
+def run(
+    bank_sizes=BANK_SIZES,
+    n_samples: int = 8192,
+    repeats: int = 3,
+    verbose: bool = True,
+    baseline: bool = True,
+) -> dict:
+    import jax
+
+    from repro.kernels.runtime import default_interpret
+
+    rows = [
+        bench_bank(b, n_samples, repeats=repeats, verbose=verbose,
+                   baseline=baseline)
+        for b in bank_sizes
+    ]
+    return {
+        "benchmark": "bank_throughput",
+        "backend": jax.default_backend(),
+        "interpret": default_interpret(),
+        "taps": TAPS,
+        "tile": TILE,
+        "rows": rows,
+    }
+
+
+def check(result: dict, committed_path: str, tolerance: float,
+          min_bank: int = 16, gate: str = "throughput") -> int:
+    """Fail (non-zero) if the gated metric regressed > tolerance versus
+    the committed baseline.
+
+    ``gate="throughput"`` compares absolute batched samples/s/filter —
+    only meaningful on hardware comparable to where the baseline was
+    recorded.  ``gate="speedup"`` compares the batched-vs-per-filter
+    ratio measured within the same run, which transfers across machines
+    (this is what CI uses).  Banks below ``min_bank`` are reported but
+    not gated: their wall time is a few ms of pure dispatch overhead and
+    too noisy for a pass/fail threshold — the batching claim lives in
+    the wide-bank rows."""
+    key = ("batched_samples_per_s_per_filter" if gate == "throughput"
+           else "speedup")
+    with open(committed_path) as f:
+        committed = json.load(f)
+    base = {r["bank_size"]: r for r in committed["rows"]}
+    status = 0
+    for row in result["rows"]:
+        b = row["bank_size"]
+        if b not in base:
+            continue
+        if b < min_bank:
+            print(f"check B={b:4d}: skipped (below --min-bank={min_bank})")
+            continue
+        old = base[b][key]
+        new = row[key]
+        ratio = new / old
+        flag = "OK" if ratio >= 1.0 - tolerance else "REGRESSION"
+        print(f"check B={b:4d} {gate}: {new:.0f} vs committed {old:.0f} "
+              f"({ratio:.2f}x) {flag}")
+        if flag != "OK":
+            status = 1
+    return status
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="short signal for CI (no JSON rewrite)")
+    ap.add_argument("--check", metavar="JSON",
+                    help="compare against a committed BENCH_fir.json")
+    ap.add_argument("--tolerance", type=float, default=0.2)
+    ap.add_argument("--min-bank", type=int, default=16,
+                    help="smallest bank size the regression gate applies to")
+    ap.add_argument("--gate", choices=("throughput", "speedup"),
+                    default="throughput",
+                    help="metric to gate on: absolute samples/s/filter "
+                         "(same-machine runs) or the machine-normalized "
+                         "batched-vs-per-filter speedup (CI)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    if args.check and not os.path.exists(args.check):
+        ap.error(f"baseline not found: {args.check}")  # before minutes of timing
+    n_samples = 2048 if args.quick else 8192
+    repeats = 1 if args.quick else 3
+    # --check must measure the same signal length as the committed
+    # baseline to be comparable; the throughput gate doesn't need the
+    # per-filter arm, the speedup gate does
+    result = run(n_samples=8192 if args.check else n_samples,
+                 repeats=repeats,
+                 baseline=not args.check or args.gate == "speedup")
+    if args.check:
+        return check(result, args.check, args.tolerance, args.min_bank,
+                     args.gate)
+    if not args.quick:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

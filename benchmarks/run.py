@@ -85,6 +85,20 @@ def bench_kernel_blmac_fir() -> None:
          f"outputs={y.shape[0]};adds_per_output={fir_blmac_additions(q)}")
 
 
+def bench_kernel_bank() -> None:
+    """Batched filter-bank kernel: samples/s/filter and speedup vs the
+    per-filter loop (full grid + BENCH_fir.json: benchmarks/bank_throughput.py)."""
+    from benchmarks import bank_throughput
+
+    rows = bank_throughput.run(bank_sizes=(16,), n_samples=2048,
+                               repeats=1, verbose=False)["rows"]
+    r = rows[0]
+    _row("kernel_bank_fir", r["batched_s"] * 1e6,
+         f"B={r['bank_size']};"
+         f"samples_per_s_per_filter={r['batched_samples_per_s_per_filter']:.0f};"
+         f"vs_per_filter={r['speedup']:.2f}x")
+
+
 def bench_kernel_pulse_matmul() -> None:
     """CSD-P pulse-code matmul vs quantization error / storage."""
     import jax.numpy as jnp
@@ -140,6 +154,7 @@ def main() -> None:
     bench_fig34_sweep()
     bench_table4_machine()
     bench_kernel_blmac_fir()
+    bench_kernel_bank()
     bench_kernel_pulse_matmul()
     bench_roofline_summary()
 

@@ -8,6 +8,7 @@ from .csd import (
     ntrits_table,
     num_pulses,
     pack_trits,
+    require_type1,
     unpack_trits,
 )
 from .costmodel import (
@@ -37,6 +38,7 @@ __all__ = [
     "ntrits_table",
     "num_pulses",
     "pack_trits",
+    "require_type1",
     "unpack_trits",
     "adds_per_coeff",
     "adds_per_tap",

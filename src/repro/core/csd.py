@@ -24,7 +24,19 @@ __all__ = [
     "csd_truncate",
     "pack_trits",
     "unpack_trits",
+    "require_type1",
 ]
+
+
+def require_type1(w, what: str = "filter") -> int:
+    """Validate odd symmetric (type-I) coefficients — the precondition of
+    the BLMAC symmetric fold (Eq. 3).  Accepts one filter (taps,) or a
+    bank (B, taps); returns the tap count."""
+    w2 = np.atleast_2d(np.asarray(w))
+    taps = int(w2.shape[-1])
+    if taps % 2 == 0 or not np.array_equal(w2, w2[..., ::-1]):
+        raise ValueError(f"{what} needs odd symmetric (type-I) coefficients")
+    return taps
 
 
 def _as_int64(w) -> np.ndarray:

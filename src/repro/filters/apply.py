@@ -14,9 +14,15 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..core.csd import csd_digits
+from ..core.csd import csd_digits, require_type1
 
-__all__ = ["sliding_windows", "fir_direct", "fir_symmetric", "fir_bit_layers"]
+__all__ = [
+    "sliding_windows",
+    "fir_direct",
+    "fir_symmetric",
+    "fir_bit_layers",
+    "fir_bit_layers_batch",
+]
 
 
 def sliding_windows(x: np.ndarray, n: int) -> np.ndarray:
@@ -77,4 +83,30 @@ def fir_bit_layers(x: np.ndarray, w: np.ndarray, symmetric: bool = True) -> np.n
                 acc += data[:, j]
             else:
                 acc -= data[:, j]
+    return acc
+
+
+def fir_bit_layers_batch(x: np.ndarray, w: np.ndarray) -> np.ndarray:
+    """Batched Eq. 2 oracle: B symmetric filters × C channels at once.
+
+    ``x`` is (C, T) (or (T,), treated as one channel); ``w`` is (B, taps)
+    (or (taps,)) odd symmetric integer coefficients sharing one tap count.
+    Returns int64 (B, C, T - taps + 1) — the bit-exact reference for
+    `repro.kernels.blmac_fir_bank`.  One einsum contraction per bit layer:
+    the pulse count of the whole bank is the number of scalar adds.
+    """
+    x2 = np.atleast_2d(np.asarray(x, np.int64))
+    w2 = np.atleast_2d(np.asarray(w, np.int64))
+    n = require_type1(w2, "batched path")
+    half = n // 2
+    win = np.lib.stride_tricks.sliding_window_view(x2, n, axis=-1)  # (C,T',n)
+    data = np.concatenate(
+        [win[..., :half] + win[..., n - 1 : half : -1], win[..., half : half + 1]],
+        axis=-1,
+    )  # (C, T', M)
+    digits = csd_digits(w2[:, : half + 1])  # (B, M, L) LSB-first
+    acc = np.zeros((w2.shape[0], data.shape[0], data.shape[1]), np.int64)
+    for layer in range(digits.shape[2] - 1, -1, -1):  # MSB → LSB
+        acc <<= 1
+        acc += np.einsum("bm,ctm->bct", digits[:, :, layer], data)
     return acc

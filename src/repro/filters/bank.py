@@ -1,0 +1,185 @@
+"""Streaming filter-bank engine: overlap-save BLMAC over B filters × C channels.
+
+`FilterBankEngine` is the serving-side face of the batched bank kernel
+(`repro.kernels.blmac_fir_bank`): feed it arbitrary-length chunks of a
+multi-channel sample stream and it returns, for every filter in the bank,
+the output samples that became computable — carrying the ``taps − 1``
+sample tail between chunks (classical overlap-save) so consecutive pushes
+produce one gapless output stream per (filter, channel) pair.
+
+Mode selection mirrors the hardware trade-off:
+
+  * ``"specialized"`` — per-filter pulse-baked programs from the LRU
+    program cache; wins for small banks where per-call overhead is
+    amortized and the add count is exactly the pulse count.
+  * ``"packed"``      — ONE `pallas_call` for the whole bank on packed
+    uint32 trit words; wins as soon as the bank is wide enough that
+    batching beats per-filter dispatch (default crossover: 8 filters).
+  * ``"auto"``        — pick by bank size (the default).
+
+Bit-exactness: both modes agree with `repro.filters.fir_bit_layers_batch`
+to the last bit on integer inputs (property-tested in `tests/test_bank.py`).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..core.csd import require_type1
+
+SPECIALIZE_THRESHOLD = 8
+
+__all__ = ["FilterBankEngine", "SPECIALIZE_THRESHOLD"]
+
+
+class FilterBankEngine:
+    """Overlap-save streaming application of a quantized FIR filter bank.
+
+    Parameters
+    ----------
+    qbank : (B, taps) or (taps,) int array
+        Quantized odd symmetric (type-I) coefficients, one row per filter.
+    channels : int
+        Number of independent input channels C (all filtered by every filter).
+    tile : int
+        Output samples per kernel grid step (lane-parallel width).
+    mode : {"auto", "packed", "specialized"}
+    interpret : bool | None
+        Pallas interpret override; None = backend default.
+    """
+
+    def __init__(
+        self,
+        qbank: np.ndarray,
+        channels: int = 1,
+        tile: int = 512,
+        mode: str = "auto",
+        bank_tile: int | None = None,
+        interpret: bool | None = None,
+    ):
+        from ..kernels.blmac_fir import (_pad_to, default_bank_tile,
+                                         pack_bank_trits, pulses_msb_first)
+
+        qbank = np.atleast_2d(np.asarray(qbank, np.int64))
+        if qbank.ndim != 2:
+            raise ValueError("qbank must be (n_filters, taps)")
+        taps = require_type1(qbank, "FilterBankEngine")
+        if channels < 1:
+            raise ValueError("channels must be >= 1")
+        if mode not in ("auto", "packed", "specialized"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if mode == "auto":
+            mode = (
+                "specialized"
+                if qbank.shape[0] < SPECIALIZE_THRESHOLD
+                else "packed"
+            )
+        self.qbank = qbank
+        self.n_filters = int(qbank.shape[0])
+        self.taps = int(taps)
+        self.channels = int(channels)
+        self.tile = int(tile)
+        self.mode = mode
+        self.bank_tile = bank_tile
+        self.interpret = interpret
+        if mode == "packed":
+            # pad + int32-view + upload the packed bank ONCE; push() then
+            # feeds a device-resident operand instead of re-staging the
+            # whole bank every chunk
+            packed = pack_bank_trits(qbank)  # (B, L, W) uint32
+            self.bank_tile = bank_tile or default_bank_tile(self.n_filters)
+            b_pad = _pad_to(self.n_filters, self.bank_tile)
+            if b_pad != self.n_filters:
+                packed = np.concatenate([
+                    packed,
+                    np.zeros((b_pad - self.n_filters,) + packed.shape[1:],
+                             packed.dtype),
+                ])
+            self._packed = jnp.asarray(packed.view(np.int32))
+            self._schedules = None
+        else:
+            self._packed = None
+            self._schedules = [pulses_msb_first(row) for row in qbank]
+        # overlap-save state: the last taps-1 samples of every channel
+        self._tail = np.zeros((channels, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+
+    # -- streaming API ------------------------------------------------------
+
+    def push(self, chunk) -> np.ndarray:
+        """Feed (C, n) samples (or (n,) when C == 1); returns the newly
+        computable outputs as int32 (B, C, n_out) — n_out may be 0 while
+        the engine is still priming its taps−1 history."""
+        chunk = np.asarray(chunk)
+        if chunk.ndim == 1:
+            chunk = chunk[None, :]
+        if chunk.shape[0] != self.channels:
+            raise ValueError(
+                f"expected {self.channels} channels, got {chunk.shape[0]}"
+            )
+        self.samples_in += chunk.shape[1]
+        buf = np.concatenate([self._tail, chunk.astype(np.int32)], axis=1)
+        n = buf.shape[1]
+        if n < self.taps:  # still priming
+            self._tail = buf
+            return np.zeros((self.n_filters, self.channels, 0), np.int32)
+        self._tail = buf[:, n - (self.taps - 1):] if self.taps > 1 else buf[:, :0]
+        y = self._apply(buf)
+        self.samples_out += y.shape[2]
+        return y
+
+    def __call__(self, chunk) -> np.ndarray:
+        return self.push(chunk)
+
+    def reset(self) -> None:
+        """Drop all buffered history (start a new stream)."""
+        self._tail = np.zeros((self.channels, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+
+    @property
+    def pending(self) -> int:
+        """Samples buffered but not yet old enough to finish a window."""
+        return self._tail.shape[1]
+
+    # -- one-shot application ----------------------------------------------
+
+    def _apply(self, buf: np.ndarray) -> np.ndarray:
+        from ..kernels.blmac_fir import blmac_fir_bank, blmac_fir_specialized
+
+        n = buf.shape[1]
+        n_out = n - self.taps + 1
+        # Quantize the jit shape: pad the buffer to a tile multiple so a
+        # stream of ragged chunk sizes hits a handful of compile-cache
+        # entries instead of retracing every push; windows that reach
+        # into the padding are dropped below.
+        n_pad = -(-n // self.tile) * self.tile
+        if n_pad != n:
+            buf = np.pad(buf, ((0, 0), (0, n_pad - n)))
+        x = jnp.asarray(buf, jnp.int32)
+        if self.mode == "packed":
+            from ..kernels.blmac_fir import _bank_call, frame_signal_batch
+            from ..kernels.runtime import resolve_interpret
+
+            frames, _ = frame_signal_batch(x, self.taps, self.tile)
+            y = _bank_call(
+                frames,
+                self._packed,
+                self.taps,
+                int(self._packed.shape[1]),
+                self.tile,
+                self.bank_tile,
+                resolve_interpret(self.interpret),
+            )  # (B_pad, C, n_tiles, tile)
+            y = y.reshape(y.shape[0], self.channels, -1)
+            return np.asarray(y[: self.n_filters, :, :n_out])
+        out = np.empty((self.n_filters, self.channels, n_out), np.int32)
+        for b, pulses in enumerate(self._schedules):
+            for c in range(self.channels):
+                out[b, c] = np.asarray(
+                    blmac_fir_specialized(
+                        x[c], pulses, self.taps, self.tile, self.interpret
+                    )
+                )[:n_out]
+        return out

@@ -1,21 +1,28 @@
 """Pallas TPU kernels for the BLMAC hot spots, with jnp oracles.
 
-  blmac_fir     — pulse-specialized bit-layer FIR (the paper's machine,
-                  lane-parallelized; exact int32)
-  blmac_matmul  — CSD-P pulse-code quantized matmul (serving-side weight
-                  decompression; attacks the decode memory roofline)
+  blmac_fir       — pulse-specialized bit-layer FIR (the paper's machine,
+                    lane-parallelized; exact int32), LRU program cache
+  blmac_fir_bank  — ONE pallas_call applying a B-filter bank to a
+                    C-channel signal: packed-trit operands, one integer
+                    matmul per bit layer (the 1.98M-filter sweep path)
+  blmac_matmul    — CSD-P pulse-code quantized matmul (serving-side weight
+                    decompression; attacks the decode memory roofline)
 """
 from .ops import (
     blmac_fir,
+    blmac_fir_bank,
     default_interpret,
     pulse_dequantize,
     pulse_matmul_op,
     pulse_quantize,
 )
+from .blmac_fir import pack_bank_trits
 from . import ref
 
 __all__ = [
     "blmac_fir",
+    "blmac_fir_bank",
+    "pack_bank_trits",
     "default_interpret",
     "pulse_dequantize",
     "pulse_matmul_op",

@@ -1,22 +1,33 @@
-"""Pallas TPU kernel: BLMAC FIR filtering.
+"""Pallas TPU kernels: BLMAC FIR filtering, single filters and whole banks.
 
 TPU adaptation of the paper's machine (DESIGN.md §2): the FPGA executes one
-add per pulse per *sample*; this kernel executes one VPU vector add per
+add per pulse per *sample*; these kernels execute one VPU vector add per
 pulse per *tile of output samples* (lane-parallel, pulse-serial).  The
 symmetric pre-add (Eq. 3) is fused.  All arithmetic is exact int32
 (§2.1: 16-bit coeffs × 8-bit samples × ≤255 taps fits 32 bits).
 
-Two modes:
-  * specialized=True  — the CSD pulse list is baked into the kernel at
-    trace time: the emitted program is literally `acc ±= u_j` per pulse
-    plus one shift per bit layer — the paper's add-count cost model *is*
-    the instruction count.  One (cheap) recompile per filter, amortized
-    over the stream, exactly like reprogramming the FPGA weight memory.
-  * specialized=False — trits are a runtime operand and each bit layer is
-    a dense ternary masked reduction; no recompilation per filter, ~N_b×
-    more vector work (still multiplication-free).
+Three modes:
 
-Input layout: the host frames the signal into overlapping tiles
+  * **specialized** — the CSD pulse list of ONE filter is baked into the
+    kernel at trace time: the emitted program is literally `acc ±= u_j`
+    per pulse plus one shift per bit layer — the paper's add-count cost
+    model *is* the instruction count.  One (cheap) recompile per distinct
+    pulse schedule, held in an LRU cache (`specialized_program`), exactly
+    like reprogramming the FPGA weight memory.
+  * **bank** — the workhorse for filter *banks*: one `pallas_call` over a
+    3-D grid `(bank_tile, channel, signal_tile)` applies B filters to C
+    channels.  Trits travel as **packed uint32 words** (16 two-bit trit
+    codes per word, `core.csd.pack_trits` layout: 0b00=0, 0b01=+1,
+    0b11=−1) and are unpacked in-kernel with shifts and masks.  Each grid
+    step builds the framed `(M, tile)` window matrix ONCE with a single
+    gather and reuses it for every filter in the bank tile; each bit
+    layer is then one `(bank_tile, M) @ (M, tile)` integer matmul —
+    Horner over layers, matmul over the bank.
+  * **dynamic** — legacy single-filter runtime-trit entry point, now a
+    B=1 bank call (kept for API compatibility and as the per-filter
+    baseline in `benchmarks/bank_throughput.py`).
+
+Input layout: the host frames each channel into overlapping tiles
 (n_tiles, tile + taps − 1 padded to a lane multiple); BlockSpec then maps
 one frame per grid step into VMEM.  The ~taps/tile halo duplication
 (≈12% at tile=1024, taps=127) is the price of clean non-overlapping
@@ -31,29 +42,49 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from ..core.csd import csd_digits
+from ..core.csd import csd_digits, pack_trits, require_type1
+from .runtime import resolve_interpret
 
 LANE = 128
+TRITS_PER_WORD = 16
+MAX_BANK_TILE = 256  # acc VMEM at tile=1024: 256×1024×4 B = 1 MiB
 
 
 def _pad_to(n: int, m: int) -> int:
     return (n + m - 1) // m * m
 
 
-def frame_signal(x: jnp.ndarray, taps: int, tile: int) -> tuple[jnp.ndarray, int]:
-    """(T,) → (n_tiles, frame_len) overlapping frames; returns padded frames
-    and the number of valid output samples."""
-    t = x.shape[0]
+# ---------------------------------------------------------------------------
+# host-side framing (overlap-save layout)
+# ---------------------------------------------------------------------------
+
+def frame_signal_batch(
+    x: jnp.ndarray, taps: int, tile: int
+) -> tuple[jnp.ndarray, int]:
+    """(C, T) → (C, n_tiles, frame_len) overlapping frames per channel;
+    returns padded frames and the number of valid output samples."""
+    t = x.shape[-1]
     n_out = t - taps + 1
     if n_out <= 0:
         raise ValueError("signal shorter than the filter")
     n_tiles = -(-n_out // tile)
     frame_len = _pad_to(tile + taps - 1, LANE)
     pad = (n_tiles - 1) * tile + frame_len - t
-    xp = jnp.pad(x, (0, max(0, pad)))
+    xp = jnp.pad(x, ((0, 0), (0, max(0, pad))))
     idx = jnp.arange(n_tiles)[:, None] * tile + jnp.arange(frame_len)[None, :]
-    return xp[idx], n_out
+    return xp[:, idx], n_out
 
+
+def frame_signal(x: jnp.ndarray, taps: int, tile: int) -> tuple[jnp.ndarray, int]:
+    """(T,) → (n_tiles, frame_len) overlapping frames; returns padded frames
+    and the number of valid output samples."""
+    frames, n_out = frame_signal_batch(x[None, :], taps, tile)
+    return frames[0], n_out
+
+
+# ---------------------------------------------------------------------------
+# specialized single-filter kernel (pulse schedule baked in at trace time)
+# ---------------------------------------------------------------------------
 
 def _fir_kernel_specialized(frame_ref, out_ref, *, pulses, taps, tile):
     """One grid step = one output tile.  `pulses` is a static tuple of
@@ -84,27 +115,6 @@ def _fir_kernel_specialized(frame_ref, out_ref, *, pulses, taps, tile):
     out_ref[0, :] = acc
 
 
-def _fir_kernel_dynamic(frame_ref, trits_ref, out_ref, *, taps, tile, n_layers):
-    """Runtime-trit mode: dense ternary reduction per bit layer."""
-    fx = frame_ref[0, :].astype(jnp.int32)
-    half = taps // 2
-    m = half + 1
-    u_rows = []
-    for j in range(m):
-        a = jax.lax.dynamic_slice(fx, (j,), (tile,))
-        if j != half:
-            a = a + jax.lax.dynamic_slice(fx, (taps - 1 - j,), (tile,))
-        u_rows.append(a)
-    u = jnp.stack(u_rows)  # (M, tile) int32
-    acc = jnp.zeros((tile,), jnp.int32)
-    for layer in range(n_layers - 1, -1, -1):  # MSB → LSB
-        d = trits_ref[layer, :m].astype(jnp.int32)  # (M,) in {-1,0,1}
-        layer_sum = jnp.sum(jnp.where(d[:, None] == 0, 0,
-                                      jnp.where(d[:, None] > 0, u, -u)), axis=0)
-        acc = (acc << 1) + layer_sum
-    out_ref[0, :] = acc
-
-
 def pulses_msb_first(qcoeffs: np.ndarray) -> tuple[tuple[int, int, int], ...]:
     """Static pulse schedule from quantized symmetric coefficients."""
     taps = qcoeffs.shape[0]
@@ -116,54 +126,208 @@ def pulses_msb_first(qcoeffs: np.ndarray) -> tuple[tuple[int, int, int], ...]:
     return tuple(out)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("pulses", "taps", "tile", "interpret")
-)
-def blmac_fir_specialized(
-    x: jnp.ndarray, pulses, taps: int, tile: int = 1024, interpret: bool = True
-) -> jnp.ndarray:
-    frames, n_out = frame_signal(x.astype(jnp.int32), taps, tile)
-    n_tiles, frame_len = frames.shape
+@functools.lru_cache(maxsize=1024)
+def specialized_program(pulses, taps: int, tile: int, interpret: bool):
+    """Compiled BLMAC program for one pulse schedule.
+
+    LRU-cached on the pulse tuple: reprogramming a filter that was seen
+    before is a dict hit, a new schedule costs one (cheap) trace — the
+    software analogue of reloading the FPGA weight memory.  The returned
+    callable is additionally jit-cached per input length.
+    """
     kern = functools.partial(
         _fir_kernel_specialized, pulses=pulses, taps=taps, tile=tile
     )
-    y = pl.pallas_call(
-        kern,
-        grid=(n_tiles,),
-        in_specs=[pl.BlockSpec((1, frame_len), lambda i: (i, 0))],
-        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
-        interpret=interpret,
-    )(frames)
-    return y.reshape(-1)[:n_out]
+
+    @jax.jit
+    def run(x: jnp.ndarray) -> jnp.ndarray:
+        frames, n_out = frame_signal(x.astype(jnp.int32), taps, tile)
+        n_tiles, frame_len = frames.shape
+        y = pl.pallas_call(
+            kern,
+            grid=(n_tiles,),
+            in_specs=[pl.BlockSpec((1, frame_len), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
+            interpret=interpret,
+        )(frames)
+        return y.reshape(-1)[:n_out]
+
+    return run
+
+
+def blmac_fir_specialized(
+    x: jnp.ndarray,
+    pulses,
+    taps: int,
+    tile: int = 1024,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Apply one pulse-specialized filter; compiles at most once per
+    distinct (pulse schedule, taps, tile, backend)."""
+    return specialized_program(
+        tuple(pulses), taps, tile, resolve_interpret(interpret)
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# batched bank kernel (packed-trit operands, 3-D grid)
+# ---------------------------------------------------------------------------
+
+def _fir_kernel_bank(
+    frame_ref, packed_ref, out_ref, *, taps, tile, n_layers, bank_tile, n_words
+):
+    """One grid step = one (bank tile × signal tile) block of one channel.
+
+    `packed_ref` holds 2-bit trit codes, 16 per uint32 word (viewed as
+    int32 — the `& 3` mask makes arithmetic vs logical shift moot), laid
+    out (bank_tile, n_layers, n_words) over the folded half-filter.
+    """
+    fx = frame_ref[0, 0, :].astype(jnp.int32)
+    frame_len = fx.shape[0]
+    half = taps // 2
+    m_pad = n_words * TRITS_PER_WORD
+    # The framed (M, tile) window matrix: one gather, built once per grid
+    # step, shared by every filter in the bank tile.  Row j holds the
+    # symmetric fold u_j[t] = x[t+j] + x[t+taps-1-j] (centre row: no fold);
+    # rows past the centre are zero and meet only zero trits.
+    j = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tile), 0)
+    t = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tile), 1)
+    fwd = fx[jnp.minimum(j + t, frame_len - 1)]
+    rev = fx[jnp.clip(taps - 1 - j + t, 0, frame_len - 1)]
+    u = jnp.where(j < half, fwd + rev, jnp.where(j == half, fwd, 0))
+
+    words = packed_ref[...]  # (bank_tile, n_layers, n_words) int32
+    shifts = 2 * jax.lax.broadcasted_iota(
+        jnp.int32, (n_words, TRITS_PER_WORD), 1
+    )
+    acc = jnp.zeros((bank_tile, tile), jnp.int32)
+    for layer in range(n_layers - 1, -1, -1):  # MSB → LSB Horner
+        codes = (words[:, layer, :, None] >> shifts[None]) & 3
+        d = (codes == 1).astype(jnp.int32) - (codes == 3).astype(jnp.int32)
+        d = d.reshape(bank_tile, m_pad)
+        # one integer matmul per bit layer: every pulse in the tile is one
+        # lane-parallel add inside this contraction
+        acc = (acc << 1) + jnp.dot(d, u, preferred_element_type=jnp.int32)
+    out_ref[...] = acc[:, None, None, :]
 
 
 @functools.partial(
-    jax.jit, static_argnames=("taps", "n_layers", "tile", "interpret")
+    jax.jit,
+    static_argnames=("taps", "n_layers", "tile", "bank_tile", "interpret"),
 )
+def _bank_call(
+    frames: jnp.ndarray,  # (C, n_tiles, frame_len) int32
+    packed: jnp.ndarray,  # (B_pad, n_layers, n_words) int32
+    taps: int,
+    n_layers: int,
+    tile: int,
+    bank_tile: int,
+    interpret: bool,
+) -> jnp.ndarray:
+    n_chan, n_tiles, frame_len = frames.shape
+    b_pad, _, n_words = packed.shape
+    kern = functools.partial(
+        _fir_kernel_bank,
+        taps=taps,
+        tile=tile,
+        n_layers=n_layers,
+        bank_tile=bank_tile,
+        n_words=n_words,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b_pad // bank_tile, n_chan, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, 1, frame_len), lambda b, c, s: (c, s, 0)),
+            pl.BlockSpec((bank_tile, n_layers, n_words), lambda b, c, s: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bank_tile, 1, 1, tile), lambda b, c, s: (b, c, s, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b_pad, n_chan, n_tiles, tile), jnp.int32),
+        interpret=interpret,
+    )(frames, packed)
+
+
+def pack_bank_trits(qbank: np.ndarray, n_layers: int | None = None) -> np.ndarray:
+    """(B, taps) symmetric int coefficients → (B, n_layers, n_words) uint32
+    packed trit words over the folded half-filter (M = taps//2 + 1 rows),
+    layer-major so the kernel slices one layer per Horner step."""
+    qbank = np.asarray(qbank, np.int64)
+    if qbank.ndim != 2:
+        raise ValueError("qbank must be (n_filters, taps)")
+    taps = require_type1(qbank, "bank kernel")
+    half = taps // 2
+    digits = csd_digits(qbank[:, : half + 1], n_digits=n_layers)  # (B, M, L)
+    return pack_trits(np.swapaxes(digits, 1, 2))  # (B, L, n_words)
+
+
+def default_bank_tile(n_filters: int) -> int:
+    """Bank-tile heuristic: whole bank in one tile up to the VMEM cap;
+    above the cap, size the tile so the padded bank tracks n_filters
+    (257 filters → 2 tiles of 136, not 2 tiles of 256)."""
+    n = max(n_filters, 1)
+    if n <= MAX_BANK_TILE:
+        return _pad_to(n, 8)
+    n_tiles = -(-n // MAX_BANK_TILE)
+    return _pad_to(-(-n // n_tiles), 8)
+
+
+def blmac_fir_bank(
+    x: jnp.ndarray,  # (C, T) or (T,)
+    packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
+    taps: int,
+    tile: int = 1024,
+    bank_tile: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Apply a B-filter bank to a C-channel signal in ONE `pallas_call`.
+
+    Returns int32 (B, C, T - taps + 1).  Bit-exact against
+    `repro.filters.fir_bit_layers_batch` on integer inputs.
+    """
+    x = jnp.asarray(x)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    packed = np.asarray(packed)
+    n_filters, n_layers, n_words = packed.shape
+    if bank_tile is None:
+        bank_tile = default_bank_tile(n_filters)
+    b_pad = _pad_to(n_filters, bank_tile)
+    if b_pad != n_filters:
+        packed = np.concatenate(
+            [packed, np.zeros((b_pad - n_filters, n_layers, n_words), packed.dtype)]
+        )
+    frames, n_out = frame_signal_batch(x.astype(jnp.int32), taps, tile)
+    y = _bank_call(
+        frames,
+        jnp.asarray(packed.view(np.int32)),
+        taps,
+        n_layers,
+        tile,
+        bank_tile,
+        resolve_interpret(interpret),
+    )  # (B_pad, C, n_tiles, tile)
+    y = y.reshape(b_pad, y.shape[1], -1)[:n_filters, :, :n_out]
+    return y[:, 0, :] if squeeze else y
+
+
 def blmac_fir_dynamic(
     x: jnp.ndarray,
-    trits: jnp.ndarray,  # (n_layers, M_pad) int8
+    trits: np.ndarray,  # (n_layers, M_pad) int8, layer-major, {-1,0,1}
     taps: int,
     n_layers: int,
     tile: int = 1024,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
-    frames, n_out = frame_signal(x.astype(jnp.int32), taps, tile)
-    n_tiles, frame_len = frames.shape
-    m_pad = trits.shape[1]
-    kern = functools.partial(
-        _fir_kernel_dynamic, taps=taps, tile=tile, n_layers=n_layers
-    )
-    y = pl.pallas_call(
-        kern,
-        grid=(n_tiles,),
-        in_specs=[
-            pl.BlockSpec((1, frame_len), lambda i: (i, 0)),
-            pl.BlockSpec((n_layers, m_pad), lambda i: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, tile), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n_tiles, tile), jnp.int32),
-        interpret=interpret,
-    )(frames, trits)
-    return y.reshape(-1)[:n_out]
+    """Single-filter runtime-trit path: a B=1 bank call on packed words.
+
+    Kept for API compatibility; `benchmarks/bank_throughput.py` uses it as
+    the per-filter baseline the batched kernel is measured against.
+    """
+    trits = np.asarray(trits)
+    half = taps // 2
+    packed = pack_trits(trits[None, :n_layers, : half + 1])  # (1, L, W)
+    return blmac_fir_bank(x, packed, taps, tile, bank_tile=1, interpret=interpret)[0]

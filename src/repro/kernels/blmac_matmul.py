@@ -25,6 +25,7 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 from ..core.csd import csd_digits, csd_truncate
+from .runtime import resolve_interpret
 
 GROUP = 32
 NULL_POS = 15
@@ -65,7 +66,7 @@ def pulse_quantize(
             continue
         p_idx = slot[sel]
         assert (p_idx < planes).all(), "csd_truncate must bound pulse count"
-        codes[p_idx, *np.nonzero(sel)] = (
+        codes[(p_idx,) + np.nonzero(sel)] = (
             0x80 | (np.where(d[sel] < 0, 0x40, 0)) | pos
         ).astype(np.uint8)
         slot[sel] += 1
@@ -127,8 +128,9 @@ def pulse_matmul(
     bm: int = 128,
     bk: int = 512,
     bn: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
+    interpret = resolve_interpret(interpret)  # static arg: trace-time resolve
     m, k_dim = x.shape
     _, _, n_dim = codes.shape
     bm = min(bm, m)

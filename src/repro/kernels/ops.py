@@ -1,19 +1,22 @@
 """Public jit'd entry points for the Pallas kernels.
 
-On non-TPU backends (this container) the kernels run under
+Backend selection lives in `runtime.default_interpret` (re-exported
+here): on non-TPU backends (this container) the kernels run under
 ``interpret=True`` — the kernel body executes as traced jnp on CPU, which
 is the validation mode demanded by the deliverables.  On TPU the same
-`pallas_call` lowers to Mosaic.
+`pallas_call` lowers to Mosaic.  Every entry point takes
+``interpret=None`` meaning "whatever the backend needs".
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .blmac_fir import (
+    blmac_fir_bank as _bank_kernel,
     blmac_fir_dynamic,
     blmac_fir_specialized,
+    pack_bank_trits,
     pulses_msb_first,
 )
 from .blmac_matmul import (
@@ -22,19 +25,17 @@ from .blmac_matmul import (
     pulse_matmul,
     pulse_quantize,
 )
-from ..core.csd import csd_digits
+from .runtime import default_interpret, resolve_interpret
+from ..core.csd import csd_digits, require_type1
 
 __all__ = [
     "blmac_fir",
+    "blmac_fir_bank",
     "pulse_quantize",
     "pulse_dequantize",
     "pulse_matmul_op",
     "default_interpret",
 ]
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def blmac_fir(
@@ -47,26 +48,38 @@ def blmac_fir(
     """Apply a quantized symmetric type-I FIR filter with the BLMAC kernel.
 
     ``qcoeffs`` is host-side (static) int data — reprogramming the filter
-    recompiles, exactly as the FPGA machine reloads its weight memory.
+    recompiles, exactly as the FPGA machine reloads its weight memory
+    (`specialize=True` hits the LRU program cache; `specialize=False`
+    ships packed trits as a runtime operand instead).
     Returns int32 (len(x) - taps + 1,).
     """
     qcoeffs = np.asarray(qcoeffs, np.int64)
-    taps = int(qcoeffs.shape[0])
-    if taps % 2 == 0 or not np.array_equal(qcoeffs, qcoeffs[::-1]):
-        raise ValueError("blmac_fir needs an odd symmetric (type-I) filter")
-    if interpret is None:
-        interpret = default_interpret()
+    taps = require_type1(qcoeffs, "blmac_fir")
+    interpret = resolve_interpret(interpret)
     if specialize:
         pulses = pulses_msb_first(qcoeffs)
         return blmac_fir_specialized(x, pulses, taps, tile, interpret)
     half = taps // 2 + 1
     digits = csd_digits(qcoeffs[:half], n_digits=17)  # (M, L)
-    m_pad = -(-half // 128) * 128
-    trits = np.zeros((digits.shape[1], m_pad), np.int8)
-    trits[:, :half] = digits.T
-    return blmac_fir_dynamic(
-        x, jnp.asarray(trits), taps, digits.shape[1], tile, interpret
-    )
+    return blmac_fir_dynamic(x, digits.T, taps, digits.shape[1], tile, interpret)
+
+
+def blmac_fir_bank(
+    x: jnp.ndarray,
+    qbank: np.ndarray,
+    tile: int = 1024,
+    bank_tile: int | None = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Apply a whole (B, taps) filter bank to a (C, T) or (T,) signal in
+    ONE `pallas_call` — packed-trit operands, one integer matmul per bit
+    layer, window matrix amortized over the bank tile.
+
+    Returns int32 (B, C, T - taps + 1), or (B, T - taps + 1) for 1-D ``x``.
+    """
+    packed = pack_bank_trits(qbank)
+    taps = int(np.asarray(qbank).shape[-1])
+    return _bank_kernel(x, packed, taps, tile, bank_tile, interpret)
 
 
 def pulse_matmul_op(
@@ -79,8 +92,7 @@ def pulse_matmul_op(
     **block_kw,
 ) -> jnp.ndarray:
     """CSD-P pulse-code matmul (see `blmac_matmul.py`)."""
-    if interpret is None:
-        interpret = default_interpret()
     return pulse_matmul(
-        x, codes, group_exp, planes, group, interpret=interpret, **block_kw
+        x, codes, group_exp, planes, group,
+        interpret=resolve_interpret(interpret), **block_kw,
     )

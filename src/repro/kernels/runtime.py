@@ -1,0 +1,26 @@
+"""Backend selection shared by every Pallas kernel in this package.
+
+Kernels take ``interpret: bool | None`` and resolve ``None`` through
+:func:`default_interpret` at trace time: on a TPU backend the
+``pallas_call`` lowers to Mosaic; everywhere else (this container is
+CPU-only) the kernel body runs under the Pallas interpreter, which is the
+bit-exact validation mode the tests rely on.
+
+Lives in its own leaf module so both ``ops.py`` (the public entry points)
+and the kernel modules it imports can share it without a cycle.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["default_interpret", "resolve_interpret"]
+
+
+def default_interpret() -> bool:
+    """True when no TPU backend is present (interpret mode required)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve an ``interpret=None`` kernel argument to the backend default."""
+    return default_interpret() if interpret is None else bool(interpret)

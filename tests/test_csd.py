@@ -1,6 +1,9 @@
 """Property tests for the CSD/NAF codec — the paper's §2 core."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (csd_decode, csd_digits, csd_truncate, max_pulses,

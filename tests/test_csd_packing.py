@@ -1,0 +1,69 @@
+"""pack_trits/unpack_trits round-trip edge cases (no hypothesis needed).
+
+The 2-bit packing became load-bearing with the packed-trit bank kernel
+(`repro.kernels.blmac_fir_bank` unpacks these words in-kernel), so the
+corner cases get explicit deterministic coverage here.
+"""
+import numpy as np
+import pytest
+
+from repro.core import csd_decode, csd_digits, pack_trits, unpack_trits
+
+
+def test_empty_input():
+    d = np.zeros((0,), np.int8)
+    w = pack_trits(d)
+    assert w.shape == (0,)
+    assert w.dtype == np.uint32
+    assert unpack_trits(w, 0).shape == (0,)
+
+
+def test_empty_last_axis_batched():
+    d = np.zeros((3, 0), np.int8)
+    w = pack_trits(d)
+    assert w.shape == (3, 0)
+    assert np.array_equal(unpack_trits(w, 0), d)
+
+
+def test_exactly_16_trits():
+    rng = np.random.default_rng(0)
+    d = rng.integers(-1, 2, 16).astype(np.int8)
+    w = pack_trits(d)
+    assert w.shape == (1,)  # exactly one word, no padding word
+    assert np.array_equal(unpack_trits(w, 16), d)
+
+
+@pytest.mark.parametrize("n", [1, 5, 15, 17, 31, 33, 100])
+def test_non_multiple_of_16(n):
+    rng = np.random.default_rng(n)
+    d = rng.integers(-1, 2, n).astype(np.int8)
+    w = pack_trits(d)
+    assert w.shape == ((n + 15) // 16,)
+    assert np.array_equal(unpack_trits(w, n), d)
+    # padding trits decode to zero: unpacking the full words gives zeros
+    full = unpack_trits(w, w.shape[-1] * 16)
+    assert not full[n:].any()
+
+
+def test_all_negative_digits():
+    d = np.full(40, -1, np.int8)
+    w = pack_trits(d)
+    assert np.array_equal(unpack_trits(w, 40), d)
+    # code 0b11 in every position of full words
+    assert w[0] == 0xFFFFFFFF
+
+
+def test_all_positive_digits():
+    d = np.ones(16, np.int8)
+    assert pack_trits(d)[0] == 0x55555555
+
+
+def test_batched_roundtrip_matches_decode():
+    rng = np.random.default_rng(7)
+    vals = rng.integers(-(2**14), 2**14, (5, 9))
+    d = csd_digits(vals)  # (5, 9, L)
+    w = pack_trits(d)
+    assert w.shape[:2] == (5, 9)
+    back = unpack_trits(w, d.shape[-1])
+    assert np.array_equal(back, d)
+    assert np.array_equal(csd_decode(back.astype(np.int64)), vals)

@@ -1,6 +1,9 @@
 """The §2.4 RLE weight programs and the §4 dot-product machine testbench."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (csd_digits, decode_codes, encode_digits,
