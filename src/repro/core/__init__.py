@@ -1,5 +1,6 @@
 """BLMAC core: CSD codec, RLE weight programs, quantizers, cost model, and
-the cycle-accurate dot-product machine (paper §2, §2.4, §3.2, §3.3, §4)."""
+the cycle-accurate dot-product machine — scalar reference and vectorized
+bank simulator (paper §2, §2.4, §3.2, §3.3, §4)."""
 from .csd import (
     csd_digits,
     csd_decode,
@@ -18,8 +19,10 @@ from .costmodel import (
     fir_blmac_additions,
     fir_blmac_additions_batch,
     machine_cycles,
+    machine_cycles_batch,
 )
 from .machine import FirBlmacMachine, MachineResult, MachineSpec
+from .vmachine import FirBlmacVMachine, VMachineResult, simulate_bank
 from .quantize import (
     PlaneQuantized,
     csd_plane_quantize,
@@ -28,7 +31,16 @@ from .quantize import (
     po2_quantize,
     po2_quantize_batch,
 )
-from .rle import EOR, RleStream, code_count, decode_codes, encode_digits
+from .rle import (
+    EOR,
+    RleBatch,
+    RleStream,
+    code_count,
+    code_count_batch,
+    decode_codes,
+    encode_digits,
+    encode_digits_batch,
+)
 
 __all__ = [
     "csd_digits",
@@ -46,17 +58,24 @@ __all__ = [
     "fir_blmac_additions",
     "fir_blmac_additions_batch",
     "machine_cycles",
+    "machine_cycles_batch",
     "FirBlmacMachine",
     "MachineResult",
     "MachineSpec",
+    "FirBlmacVMachine",
+    "VMachineResult",
+    "simulate_bank",
     "PlaneQuantized",
     "csd_plane_quantize",
     "dequantize",
     "plane_dequantize",
     "po2_quantize",
     "EOR",
+    "RleBatch",
     "RleStream",
     "code_count",
+    "code_count_batch",
     "decode_codes",
     "encode_digits",
+    "encode_digits_batch",
 ]

@@ -11,7 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from .csd import csd_digits, num_pulses
-from .rle import code_count
+from .rle import code_count, code_count_batch
 
 __all__ = [
     "fir_blmac_additions",
@@ -20,6 +20,7 @@ __all__ = [
     "adds_per_tap",
     "classical_equivalent_adds",
     "machine_cycles",
+    "machine_cycles_batch",
 ]
 
 
@@ -66,3 +67,23 @@ def machine_cycles(
     one cycle per RLE code (pulse or EOR) + fixed per-sample overhead."""
     digits = csd_digits(_half(wq), n_digits=n_layers)
     return code_count(digits) + overhead
+
+
+def machine_cycles_batch(
+    wq: np.ndarray,
+    n_layers: int = 16,
+    overhead: int = 0,
+    fused_last_add: bool = False,
+) -> np.ndarray:
+    """Vectorized :func:`machine_cycles` over a (B, taps) bank → (B,) int64.
+
+    ``fused_last_add`` applies the §4 optimization (the last add of each
+    non-empty bit layer overlaps the shift: −1 cycle per such layer, −16
+    for a fully-populated 16-layer program) — matching both simulators.
+    """
+    wq2 = np.atleast_2d(np.asarray(wq, np.int64))
+    digits = csd_digits(_half(wq2), n_digits=n_layers)  # (B, M, L)
+    cycles = code_count_batch(digits) + overhead
+    if fused_last_add:
+        cycles = cycles - np.count_nonzero(digits.any(axis=1), axis=-1)
+    return cycles

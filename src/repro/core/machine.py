@@ -60,8 +60,10 @@ class MachineResult:
 class FirBlmacMachine:
     """Behavioural + cycle model.  Program once per filter, then stream."""
 
-    def __init__(self, spec: MachineSpec = MachineSpec()):
-        self.spec = spec
+    def __init__(self, spec: MachineSpec | None = None):
+        # None default (not `spec=MachineSpec()`): a mutable-looking default
+        # would be evaluated once at import and shared by every machine
+        self.spec = spec if spec is not None else MachineSpec()
         self._stream: RleStream | None = None
         self._coeffs: np.ndarray | None = None
 

@@ -22,7 +22,17 @@ import numpy as np
 EOR = 0x80
 _SIGN = 0x40
 
-__all__ = ["EOR", "RleStream", "encode_digits", "decode_codes", "code_count"]
+__all__ = [
+    "EOR",
+    "RleStream",
+    "RleBatch",
+    "encode_digits",
+    "encode_digits_batch",
+    "decode_codes",
+    "code_count",
+    "code_count_batch",
+    "max_zrun_batch",
+]
 
 
 @dataclass(frozen=True)
@@ -101,3 +111,119 @@ def code_count(digits: np.ndarray) -> int:
     and (bar fixed overhead) its cycle count per output sample."""
     d = np.asarray(digits)
     return int(np.count_nonzero(d)) + d.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# bank-level (vectorized) encoding — the weight programs of a whole filter
+# bank in numpy array ops, no per-code Python loop
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RleBatch:
+    """Weight programs for a whole bank, one padded row per filter.
+
+    ``codes[b, :n_codes[b]]`` is exactly ``encode_digits(digits[b]).codes``;
+    entries past ``n_codes[b]`` are zero padding and carry no meaning.
+    """
+
+    codes: np.ndarray  # uint8 (B, max_codes), rows zero-padded
+    n_codes: np.ndarray  # int64 (B,)
+    n_coeffs: int
+    n_layers: int
+
+    def __len__(self) -> int:
+        return int(self.codes.shape[0])
+
+    def stream(self, b: int) -> RleStream:
+        """The b-th filter's program as a scalar :class:`RleStream`."""
+        return RleStream(
+            self.codes[b, : self.n_codes[b]].copy(),
+            self.n_coeffs,
+            self.n_layers,
+        )
+
+    @property
+    def n_pulses(self) -> np.ndarray:
+        return self.n_codes - self.n_layers
+
+    def fits(self, mem_codes: int = 256) -> np.ndarray:
+        """(B,) bool — which programs fit a ``mem_codes``-entry memory."""
+        return self.n_codes <= mem_codes
+
+
+def encode_digits_batch(digits: np.ndarray, zrun_bits: int = 6) -> RleBatch:
+    """Vectorized :func:`encode_digits` over a bank.
+
+    ``digits`` is (B, n_coeffs, n_layers) in {-1, 0, 1}.  The whole bank is
+    encoded with a handful of numpy passes (nonzero + bincount + two
+    scatters); per-row results are bit-identical to the scalar encoder.
+    Raises ``ValueError`` if any zero-run in any filter overflows the ZRUN
+    field, like the scalar path.
+    """
+    d = np.asarray(digits)
+    if d.ndim != 3:
+        raise ValueError(f"digits must be (B, n_coeffs, n_layers), got {d.shape}")
+    n_bank, n_coeffs, n_layers = d.shape
+    max_run = (1 << zrun_bits) - 1
+    dT = d.transpose(0, 2, 1)  # (B, L, C): layer-major, LSB first
+    b_idx, l_idx, j_idx = np.nonzero(dT)  # lexicographic (b, l, j) order
+    signs = dT[b_idx, l_idx, j_idx]
+    # zero-run preceding each pulse: distance to the previous pulse in the
+    # same (filter, layer), or to the start of the layer
+    same = np.zeros(b_idx.size, bool)
+    same[1:] = (b_idx[1:] == b_idx[:-1]) & (l_idx[1:] == l_idx[:-1])
+    prev_end = np.concatenate([[0], j_idx[:-1] + 1])
+    runs = j_idx - np.where(same, prev_end, 0)
+    if runs.size and runs.max() > max_run:
+        bad = int(runs.max())
+        raise ValueError(f"zero-run {bad} exceeds {zrun_bits}-bit ZRUN field")
+    pulse_codes = (np.where(signs < 0, _SIGN, 0) | runs).astype(np.uint8)
+    # stream position of each pulse: pulses before it in its row + one EOR
+    # per earlier layer (l_idx)
+    pulses_per_row = np.bincount(b_idx, minlength=n_bank)
+    row_start = np.concatenate([[0], np.cumsum(pulses_per_row)])[:-1]
+    pulse_pos = np.arange(b_idx.size) - row_start[b_idx] + l_idx
+    # EOR of (b, l) sits after every pulse of layers <= l and l earlier EORs
+    pulses_per_bl = np.bincount(
+        b_idx * n_layers + l_idx, minlength=n_bank * n_layers
+    ).reshape(n_bank, n_layers)
+    eor_pos = np.cumsum(pulses_per_bl, axis=1) + np.arange(n_layers)
+    n_codes = pulses_per_row + n_layers
+    max_codes = int(n_codes.max()) if n_bank else 0  # B=0: empty batch
+    codes = np.zeros((n_bank, max_codes), np.uint8)
+    codes[np.repeat(np.arange(n_bank), n_layers), eor_pos.ravel()] = EOR
+    codes[b_idx, pulse_pos] = pulse_codes
+    return RleBatch(codes, n_codes.astype(np.int64), n_coeffs, n_layers)
+
+
+def code_count_batch(digits: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`code_count`: (..., n_coeffs, n_layers) digit
+    tensors → (...,) int64 code counts (pulses + one EOR per layer)."""
+    d = np.asarray(digits)
+    if d.ndim < 2:
+        raise ValueError("digits need at least (n_coeffs, n_layers) axes")
+    return (
+        np.count_nonzero(d, axis=(-2, -1)).astype(np.int64) + d.shape[-1]
+    )
+
+
+def max_zrun_batch(digits: np.ndarray) -> np.ndarray:
+    """(B, n_coeffs, n_layers) → (B,) longest zero-run *preceding a pulse*
+    in any layer — the quantity the ZRUN field must hold.  Trailing zeros
+    of a layer are never encoded and do not count (a filter fits iff
+    ``max_zrun_batch(d) <= 2**zrun_bits - 1``, matching exactly where the
+    encoders raise)."""
+    d = np.asarray(digits)
+    if d.ndim != 3:
+        raise ValueError(f"digits must be (B, n_coeffs, n_layers), got {d.shape}")
+    nz = d != 0
+    j = np.arange(d.shape[1])[None, :, None]
+    prev_end = np.maximum.accumulate(np.where(nz, j + 1, 0), axis=1)
+    shifted = np.concatenate(
+        [np.zeros_like(prev_end[:, :1]), prev_end[:, :-1]], axis=1
+    )
+    runs = np.where(nz, j - shifted, 0)
+    if not runs.size:
+        return np.zeros(d.shape[0], np.int64)
+    return runs.max(axis=(1, 2)).astype(np.int64)

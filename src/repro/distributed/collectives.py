@@ -62,7 +62,20 @@ def make_compressed_dp_grad_fn(loss_fn, mesh: Mesh, axis: str = "data"):
     Params replicated; batch sharded on `axis`.  Returns a function
     (params, batch) → (loss, grads) with grads reduced in int8.
     """
-    from jax import shard_map
+    try:  # jax >= 0.5 re-exports shard_map at the top level
+        from jax import shard_map
+    except ImportError:  # jax 0.4.x: experimental namespace
+        from jax.experimental.shard_map import shard_map
+    # the "skip replication check" kwarg was renamed check_rep → check_vma;
+    # key off the actual signature, not the import location
+    import inspect
+
+    params = inspect.signature(shard_map).parameters
+    _no_check = (
+        {"check_vma": False} if "check_vma" in params
+        else {"check_rep": False} if "check_rep" in params
+        else {}
+    )
 
     def local_grads(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
@@ -78,7 +91,7 @@ def make_compressed_dp_grad_fn(loss_fn, mesh: Mesh, axis: str = "data"):
             local_grads, mesh=mesh,
             in_specs=(pspec, bspec),
             out_specs=(P(), jax.tree_util.tree_map(lambda _: P(), params)),
-            check_vma=False,
+            **_no_check,
         )
         return f(params, batch)
 

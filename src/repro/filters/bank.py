@@ -104,6 +104,43 @@ class FilterBankEngine:
         self._tail = np.zeros((channels, 0), np.int32)
         self.samples_in = 0
         self.samples_out = 0
+        self._cycle_cache: dict[tuple, np.ndarray] = {}
+
+    # -- cost model ---------------------------------------------------------
+
+    def predicted_machine_cycles(self, spec=None) -> np.ndarray:
+        """(B,) clock cycles per output each filter would cost on the §4
+        FPGA dot-product machine (one cycle per RLE code + overhead).
+
+        ``spec`` is a `repro.core.MachineSpec` (default: the paper's
+        127-tap spec parameters applied to this bank's tap count); results
+        are cached per spec.  Agrees exactly with both simulators —
+        `FirBlmacVMachine` asserts this in `tests/differential.py`.
+        """
+        from ..core.costmodel import machine_cycles_batch
+        from ..core.machine import MachineSpec
+
+        if spec is None:
+            spec = MachineSpec(taps=self.taps)
+        if spec.taps != self.taps:
+            raise ValueError(
+                f"spec is for {spec.taps} taps, bank has {self.taps}"
+            )
+        key = (spec.n_layers, spec.start_overhead, spec.fused_last_add)
+        if key not in self._cycle_cache:
+            cycles = machine_cycles_batch(
+                self.qbank,
+                n_layers=spec.n_layers,
+                overhead=spec.start_overhead,
+                fused_last_add=spec.fused_last_add,
+            )
+            cycles.setflags(write=False)  # shared cache entry: no mutation
+            self._cycle_cache[key] = cycles
+        return self._cycle_cache[key]
+
+    def predicted_mean_cycles(self, spec=None) -> float:
+        """Bank-average §4 machine cycles per output sample."""
+        return float(self.predicted_machine_cycles(spec).mean())
 
     # -- streaming API ------------------------------------------------------
 

@@ -344,7 +344,10 @@ def analyze_hlo(text: str, default_group: int = 1) -> CompCost:
                 continue
             if op == "dot":
                 dims = shape_dims(d.type_str)
-                lm = re.match(r"\s*%([\w\.\-]+)", d.args)
+                # operands may be printed bare (%lhs, %rhs) or typed
+                # (f32[16,32]{1,0} %lhs, ...) depending on the XLA version,
+                # so locate the first operand name rather than anchoring
+                lm = re.search(r"%([\w\.\-]+)", d.args)
                 contract = 1
                 cm = _CONTRACT_RE.search(d.line)
                 if lm and cm and lm.group(1) in types and cm.group(1):

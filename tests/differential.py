@@ -1,0 +1,209 @@
+"""Four-way differential verification harness.
+
+One bank, one signal, four independent implementations of the BLMAC dot
+product — proven bit-exact against *each other*, not just individually
+plausible:
+
+  1. **oracle**   — `repro.filters.fir_bit_layers_batch` (numpy, Eq. 2),
+  2. **kernel**   — `repro.kernels.blmac_fir_bank` (Pallas, packed trits),
+  3. **machine**  — `repro.core.FirBlmacMachine` (scalar cycle-accurate
+                    reference, per-code Python loop),
+  4. **vmachine** — `repro.core.FirBlmacVMachine` (vectorized bank
+                    simulator under test).
+
+Beyond outputs, the harness checks what only the machines can disagree on:
+per-output cycle counts (scalar vs vectorized vs the static cost model vs
+`FilterBankEngine.predicted_machine_cycles`) and the weight-memory
+programming decision (scalar `program` raises exactly where the vectorized
+fit mask is False).  The scalar machine is slow, so its leg runs on
+``scalar_samples`` filters and ``scalar_outputs`` output positions;
+everything vectorized covers the whole bank.
+
+Bank sources: `random_type1_bank` (seeded random coefficients — stress the
+digit space) and `sampled_sweep_bank` (real filters from the paper's §3.1
+design sweep).  Used by `tests/test_vmachine.py`; importable from any
+future test or benchmark.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import (FirBlmacMachine, FirBlmacVMachine, MachineSpec,
+                        machine_cycles_batch, po2_quantize_batch)
+from repro.core.machine import MachineResult
+from repro.filters import (FilterBankEngine, fir_bit_layers_batch, sweep_bank,
+                           sweep_specs)
+from repro.kernels import blmac_fir_bank
+
+__all__ = [
+    "DifferentialReport",
+    "four_way_check",
+    "random_type1_bank",
+    "sampled_sweep_bank",
+]
+
+
+# ---------------------------------------------------------------------------
+# bank sources
+# ---------------------------------------------------------------------------
+
+
+def random_type1_bank(
+    n_filters: int,
+    taps: int,
+    coeff_bits: int = 16,
+    seed: int = 0,
+    density: float = 1.0,
+) -> np.ndarray:
+    """Seeded random odd-symmetric integer bank.  ``density`` < 1 zeroes a
+    fraction of coefficients — sparse programs exercise long zero-runs."""
+    if taps % 2 == 0:
+        raise ValueError("type-I filters need an odd tap count")
+    rng = np.random.default_rng(seed)
+    lim = 1 << (coeff_bits - 1)
+    half = rng.integers(-lim, lim, (n_filters, taps // 2 + 1))
+    if density < 1.0:
+        half *= rng.random(half.shape) < density
+    return np.concatenate([half, half[:, :-1][:, ::-1]], axis=1)
+
+
+def sampled_sweep_bank(
+    taps: int = 127,
+    n_div: int = 10,
+    n_filters: int = 8,
+    window: str = "hamming",
+    coeff_bits: int = 16,
+    seed: int = 0,
+) -> np.ndarray:
+    """Quantized filters sampled from the paper's §3.1 design sweep."""
+    bank = sweep_bank(taps, n_div, window, sweep_specs(n_div))
+    rng = np.random.default_rng(seed)
+    rows = rng.choice(len(bank), size=min(n_filters, len(bank)), replace=False)
+    q, _ = po2_quantize_batch(bank[rows], bits=coeff_bits)
+    return q
+
+
+# ---------------------------------------------------------------------------
+# the harness
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class DifferentialReport:
+    n_filters: int
+    n_out: int
+    fits: np.ndarray  # (B,) bool — vectorized weight-memory verdicts
+    mean_cycles: float  # over all filters, vmachine
+    scalar_checked: int  # filters the scalar machine replayed
+    scalar_rejected: int  # filters the scalar machine refused to program
+
+    def __str__(self) -> str:  # pragma: no cover - debugging aid
+        return (
+            f"four-way OK: B={self.n_filters} n_out={self.n_out} "
+            f"fits={int(self.fits.sum())}/{self.n_filters} "
+            f"mean_cycles={self.mean_cycles:.1f} "
+            f"scalar legs: {self.scalar_checked} replayed, "
+            f"{self.scalar_rejected} reject-parity"
+        )
+
+
+def four_way_check(
+    qbank: np.ndarray,
+    x: np.ndarray | None = None,
+    spec: MachineSpec | None = None,
+    *,
+    n_out: int = 48,
+    tile: int = 256,
+    scalar_samples: int = 4,
+    scalar_outputs: int = 8,
+    seed: int = 0,
+    interpret: bool | None = None,
+) -> DifferentialReport:
+    """Assert all four implementations agree on ``qbank``; see module doc.
+
+    ``x`` defaults to a seeded random signal producing ``n_out`` outputs
+    within the spec's sample range.  Raises AssertionError with the leg
+    name on any divergence.
+    """
+    qbank = np.atleast_2d(np.asarray(qbank, np.int64))
+    n_filters, taps = qbank.shape
+    if spec is None:
+        spec = MachineSpec(taps=taps)
+    assert spec.taps == taps, "spec/taps mismatch"
+    rng = np.random.default_rng(seed)
+    if x is None:
+        lim = 1 << (spec.sample_bits - 1)
+        x = rng.integers(-lim, lim, taps - 1 + n_out)
+    x = np.asarray(x, np.int64)
+    n_out = x.size - taps + 1
+
+    # -- leg 1: numpy oracle -------------------------------------------------
+    oracle = fir_bit_layers_batch(x, qbank)[:, 0, :]  # (B, n_out)
+
+    # -- leg 4: vectorized machine (under test) ------------------------------
+    vm = FirBlmacVMachine(spec)
+    fits = vm.program_bank(qbank)
+    vres = vm.run(x)
+    assert np.array_equal(vres.outputs, oracle), "vmachine outputs != oracle"
+    cm = machine_cycles_batch(
+        qbank, spec.n_layers, spec.start_overhead, spec.fused_last_add
+    )
+    assert np.array_equal(vres.cycles, np.broadcast_to(cm[:, None], vres.cycles.shape)), \
+        "vmachine cycles != static cost model"
+
+    # -- leg 2: Pallas bank kernel -------------------------------------------
+    import jax.numpy as jnp
+
+    y = blmac_fir_bank(
+        jnp.asarray(x, jnp.int32), qbank, tile=tile, interpret=interpret
+    )  # 1-D signal → squeezed (B, n_out)
+    assert np.array_equal(np.asarray(y, np.int64), oracle), \
+        "pallas bank kernel != oracle"
+
+    # -- engine-side cycle prediction agrees with the simulators -------------
+    eng = FilterBankEngine(qbank, channels=1, tile=tile, interpret=interpret)
+    assert np.array_equal(eng.predicted_machine_cycles(spec), vres.cycles[:, 0]), \
+        "FilterBankEngine cycle prediction != vmachine"
+
+    # -- leg 3: scalar cycle-accurate machine (sampled) ----------------------
+    n_scalar = min(scalar_samples, n_filters)
+    rows = rng.choice(n_filters, size=n_scalar, replace=False)
+    xs = x[: taps - 1 + min(scalar_outputs, n_out)]
+    checked = rejected = 0
+    for b in rows:
+        m = FirBlmacMachine(spec)
+        try:
+            m.program(qbank[b])
+        except ValueError:
+            assert not fits[b], f"scalar rejected filter {b}, vmachine fit it"
+            continue  # reject-parity is re-checked (and counted) below
+        assert fits[b], f"vmachine rejected filter {b}, scalar programmed it"
+        sres: MachineResult = m.run(xs)
+        n = sres.outputs.size
+        assert np.array_equal(sres.outputs, vres.outputs[b, :n]), \
+            f"scalar machine outputs != vmachine (filter {b})"
+        assert np.array_equal(sres.cycles, vres.cycles[b, :n]), \
+            f"scalar machine cycles != vmachine (filter {b})"
+        checked += 1
+
+    # reject-parity for every filter the mask flags (cheap: program only)
+    for b in np.nonzero(~fits)[0]:
+        m = FirBlmacMachine(spec)
+        try:
+            m.program(qbank[b])
+            raise AssertionError(
+                f"filter {b}: vmachine says overflow, scalar programmed it"
+            )
+        except ValueError:
+            rejected += 1
+
+    return DifferentialReport(
+        n_filters=n_filters,
+        n_out=n_out,
+        fits=fits,
+        mean_cycles=vres.mean_cycles,
+        scalar_checked=checked,
+        scalar_rejected=rejected,
+    )

@@ -171,3 +171,91 @@ def test_engine_rejects_bad_input():
     eng = FilterBankEngine(q, channels=2)
     with pytest.raises(ValueError):
         eng.push(np.zeros((3, 10)))
+
+
+@pytest.mark.parametrize("mode", ["packed", "specialized"])
+def test_engine_sub_tap_chunks_after_priming(mode):
+    """Chunks shorter than taps-1 — including single samples — after the
+    engine is already primed must each yield exactly chunk-sized output."""
+    q = _qbank(3, 15)
+    rng = np.random.default_rng(20)
+    x = rng.integers(-128, 128, (1, 60))
+    eng = FilterBankEngine(q, channels=1, tile=128, mode=mode)
+    eng.push(x[:, :14])  # exactly taps-1: still priming
+    assert eng.pending == 14
+    outs = [eng.push(x[:, i : i + 1]) for i in range(14, 60)]  # 1 at a time
+    assert all(o.shape == (3, 1, 1) for o in outs)
+    y = np.concatenate(outs, axis=2)
+    assert np.array_equal(y, fir_bit_layers_batch(x, q))
+
+
+def test_engine_empty_chunk_is_identity():
+    q = _qbank(2, 15)
+    eng = FilterBankEngine(q, channels=2, tile=128)
+    rng = np.random.default_rng(21)
+    x = rng.integers(-128, 128, (2, 40))
+    y1 = eng.push(x)
+    pend = eng.pending
+    y_empty = eng.push(np.zeros((2, 0), np.int64))
+    assert y_empty.shape == (2, 2, 0)
+    assert eng.pending == pend and eng.samples_in == 40
+    y2 = eng.push(x)  # stream continues seamlessly after the empty push
+    full = fir_bit_layers_batch(np.concatenate([x, x], axis=1), q)
+    assert np.array_equal(np.concatenate([y1, y2], axis=2), full)
+
+
+def test_engine_empty_chunk_while_priming():
+    q = _qbank(2, 15)
+    eng = FilterBankEngine(q, channels=1, tile=128)
+    assert eng.push(np.zeros(0, np.int64)).shape == (2, 1, 0)
+    eng.push(np.arange(5))
+    assert eng.push(np.zeros(0, np.int64)).shape == (2, 1, 0)
+    assert eng.pending == 5
+
+
+@pytest.mark.parametrize("mode", ["packed", "specialized"])
+def test_engine_final_chunk_not_tile_multiple(mode):
+    """A final chunk that leaves the padded buffer off the tile grid: the
+    windows reaching into the zero padding must be dropped, not returned."""
+    q = _qbank(4, 31)
+    rng = np.random.default_rng(22)
+    x = rng.integers(-128, 128, (1, 777))  # 777 = 6*128 + 9, taps 31
+    eng = FilterBankEngine(q, channels=1, tile=128, mode=mode)
+    y = np.concatenate(
+        [eng.push(x[:, :512]), eng.push(x[:, 512:])], axis=2
+    )
+    assert y.shape == (4, 1, 777 - 31 + 1)
+    assert np.array_equal(y, fir_bit_layers_batch(x, q))
+
+
+def test_engine_tail_state_and_output_dtype():
+    """The carried tail must stay int32 whatever integer dtype is pushed,
+    and outputs are int32 — the serving-side contract."""
+    q = _qbank(2, 15)
+    eng = FilterBankEngine(q, channels=1, tile=128)
+    for dtype in (np.int8, np.int16, np.int32, np.int64):
+        y = eng.push(np.ones(20, dtype))
+        assert y.dtype == np.int32
+        assert eng._tail.dtype == np.int32
+        assert eng._tail.shape == (1, 14)
+    eng.reset()
+    assert eng._tail.dtype == np.int32 and eng._tail.shape == (1, 0)
+
+
+def test_engine_predicted_cycles_matches_cost_model():
+    from repro.core import MachineSpec, machine_cycles_batch
+
+    q = _qbank(5, 63)
+    eng = FilterBankEngine(q, channels=1)
+    cyc = eng.predicted_machine_cycles()
+    assert np.array_equal(cyc, machine_cycles_batch(q))
+    spec = MachineSpec(taps=63, fused_last_add=True, start_overhead=2)
+    fused = eng.predicted_machine_cycles(spec)
+    assert np.array_equal(
+        fused, machine_cycles_batch(q, overhead=2, fused_last_add=True)
+    )
+    assert eng.predicted_mean_cycles() == pytest.approx(cyc.mean())
+    # cached: same spec parameters → same array object
+    assert eng.predicted_machine_cycles(spec) is fused
+    with pytest.raises(ValueError):
+        eng.predicted_machine_cycles(MachineSpec(taps=127))

@@ -50,6 +50,21 @@ def test_truncate_bound(v, planes):
     assert abs(v - t) < 2.0 ** max(e - 2 * planes + 2, 0)
 
 
+@given(st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=20),
+       st.integers(0, 8))
+@settings(max_examples=200, deadline=None)
+def test_truncate_pulse_budget_invariants(vals, planes):
+    """csd_truncate is a pulse-budget quantizer: (1) the result never
+    spends more than `planes` pulses, (2) weights already under budget
+    pass through exactly, (3) it is idempotent."""
+    w = np.asarray(vals, np.int64)
+    t = csd_truncate(w, planes)
+    assert (num_pulses(np.abs(t)) <= planes).all()
+    under = num_pulses(np.abs(w)) <= planes
+    assert np.array_equal(t[under], w[under])
+    assert np.array_equal(csd_truncate(t, planes), t)
+
+
 @given(st.lists(st.integers(-1, 1), min_size=1, max_size=100))
 @settings(max_examples=200, deadline=None)
 def test_pack_roundtrip(trits):

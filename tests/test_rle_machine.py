@@ -5,8 +5,10 @@ import pytest
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
+from hypothesis.extra.numpy import arrays
 
-from repro.core import (csd_digits, decode_codes, encode_digits,
+from repro.core import (code_count, code_count_batch, csd_digits,
+                        decode_codes, encode_digits, encode_digits_batch,
                         po2_quantize)
 from repro.core.machine import FirBlmacMachine, MachineSpec
 from repro.filters import design_bank, fir_direct
@@ -19,6 +21,43 @@ def test_rle_roundtrip(ws):
     st_ = encode_digits(d)
     assert np.array_equal(decode_codes(st_), d)
     assert st_.n_codes == np.count_nonzero(d) + 16
+
+
+# arbitrary {-1,0,1} matrices, NOT just NAF outputs: adjacent pulses, dense
+# layers, empty layers — anything the weight memory could be asked to hold.
+# n_coeffs <= 64 keeps every zero-run inside the 6-bit ZRUN field.
+_digit_matrices = arrays(
+    np.int8,
+    st.tuples(st.integers(1, 64), st.integers(1, 18)),
+    elements=st.integers(-1, 1),
+)
+
+
+@given(_digit_matrices)
+@settings(max_examples=100, deadline=None)
+def test_rle_roundtrip_arbitrary_digits(d):
+    stream = encode_digits(d)
+    assert np.array_equal(decode_codes(stream), d)
+    assert stream.n_codes == code_count(d)
+    assert stream.n_pulses == np.count_nonzero(d)
+
+
+@given(arrays(
+    np.int8,
+    st.tuples(st.integers(1, 6), st.integers(1, 32), st.integers(1, 8)),
+    elements=st.integers(-1, 1),
+))
+@settings(max_examples=100, deadline=None)
+def test_encode_digits_batch_matches_scalar(d):
+    """The vectorized bank encoder is bit-identical to the scalar one on
+    every row, for arbitrary digit matrices."""
+    batch = encode_digits_batch(d)
+    counts = code_count_batch(d)
+    for b in range(d.shape[0]):
+        ref = encode_digits(d[b])
+        assert np.array_equal(batch.stream(b).codes, ref.codes)
+        assert batch.n_codes[b] == ref.n_codes == counts[b]
+        assert np.array_equal(decode_codes(batch.stream(b)), d[b])
 
 
 def _machine_check(coeffs, seed=0, n_out=64, spec=None):

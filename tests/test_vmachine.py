@@ -1,0 +1,163 @@
+"""The vectorized BLMAC machine simulator, via the four-way differential
+harness (`tests/differential.py`): oracle ⇄ Pallas bank kernel ⇄ scalar
+`FirBlmacMachine` ⇄ `FirBlmacVMachine`, plus cycle-count and
+weight-memory-overflow parity."""
+import numpy as np
+import pytest
+
+from repro.core import (FirBlmacMachine, FirBlmacVMachine, MachineSpec,
+                        csd_digits, encode_digits, encode_digits_batch,
+                        machine_cycles, machine_cycles_batch, simulate_bank)
+from tests.differential import (four_way_check, random_type1_bank,
+                                sampled_sweep_bank)
+
+
+@pytest.mark.parametrize("taps,n_filters", [(15, 6), (31, 5), (63, 4)])
+def test_four_way_random_banks(taps, n_filters):
+    # sparse banks so most programs fit the weight memory
+    q = random_type1_bank(n_filters, taps, seed=taps, density=0.6)
+    rep = four_way_check(q, seed=taps)
+    assert rep.n_filters == n_filters
+    assert rep.scalar_checked + rep.scalar_rejected > 0
+
+
+def test_four_way_sweep_filters_127_taps():
+    """Real filters from the paper's design sweep at the paper's tap count,
+    including some that overflow the 256-entry weight memory."""
+    q = sampled_sweep_bank(taps=127, n_div=10, n_filters=8, seed=1)
+    rep = four_way_check(q, scalar_samples=3, seed=2)
+    assert rep.n_out == 48
+
+
+def test_four_way_dense_random_bank_overflows():
+    """Dense random 16-bit coefficients need ~370 codes — every filter
+    must be rejected by BOTH machines, outputs still exact."""
+    q = random_type1_bank(4, 127, seed=9)
+    rep = four_way_check(q, scalar_samples=2, seed=3)
+    assert not rep.fits.any()
+    assert rep.scalar_rejected == 4
+
+
+def test_four_way_fused_last_add_spec():
+    q = random_type1_bank(4, 31, seed=5, density=0.5)
+    spec = MachineSpec(taps=31, fused_last_add=True)
+    four_way_check(q, spec=spec, seed=6)
+
+
+def test_four_way_start_overhead_spec():
+    q = random_type1_bank(3, 15, seed=7, density=0.5)
+    spec = MachineSpec(taps=15, start_overhead=2)
+    rep = four_way_check(q, spec=spec, seed=8)
+    base = four_way_check(q, spec=MachineSpec(taps=15), seed=8)
+    assert rep.mean_cycles == base.mean_cycles + 2
+
+
+def test_vmachine_single_filter_row_equals_scalar_full_run():
+    """Every output position (not a sample) of a long run, one filter."""
+    q = random_type1_bank(1, 31, seed=11, density=0.4)
+    spec = MachineSpec(taps=31)
+    rng = np.random.default_rng(12)
+    x = rng.integers(-128, 128, 31 - 1 + 300)
+    vres = simulate_bank(q, x, spec)
+    m = FirBlmacMachine(spec)
+    m.program(q[0])
+    sres = m.run(x)
+    assert np.array_equal(vres.outputs[0], sres.outputs)
+    assert np.array_equal(vres.cycles[0], sres.cycles)
+
+
+def test_vmachine_fused_variant_saves_16_cycles_on_full_program():
+    """§4: fusing the last add with the shift saves one cycle per
+    non-empty bit layer — exactly 16 for a fully-populated program."""
+    q = sampled_sweep_bank(taps=127, n_div=10, n_filters=6, seed=13)
+    base = machine_cycles_batch(q)
+    fused = machine_cycles_batch(q, fused_last_add=True)
+    nonempty = np.count_nonzero(
+        csd_digits(q[:, :64], n_digits=16).any(axis=1), axis=-1
+    )
+    assert np.array_equal(base - fused, nonempty)
+    assert (base - fused).max() == 16  # real 16-bit filters fill all layers
+
+
+def test_machine_cycles_batch_matches_scalar():
+    q = random_type1_bank(6, 15, seed=14, density=0.7)
+    batch = machine_cycles_batch(q, n_layers=16, overhead=1)
+    for b in range(6):
+        assert batch[b] == machine_cycles(q[b], n_layers=16, overhead=1)
+
+
+def test_encode_digits_batch_matches_scalar_rows():
+    q = random_type1_bank(5, 31, seed=15, density=0.5)
+    d = csd_digits(q[:, :16], n_digits=16)
+    batch = encode_digits_batch(d)
+    for b in range(5):
+        s = encode_digits(d[b])
+        assert np.array_equal(batch.stream(b).codes, s.codes)
+        assert batch.n_codes[b] == s.n_codes
+        assert batch.n_pulses[b] == s.n_pulses
+        assert batch.fits()[b] == s.fits()
+    assert len(batch) == 5
+
+
+def test_encode_digits_batch_zrun_overflow_raises():
+    d = np.zeros((2, 100, 3), np.int8)
+    d[1, 70, 1] = 1  # 70 leading zeros > 63
+    with pytest.raises(ValueError, match="ZRUN"):
+        encode_digits_batch(d)
+
+
+def test_vmachine_zrun_overflow_sets_fit_mask():
+    """A filter whose digits need a >63 zero-run is unprogrammable — the
+    scalar encoder raises; the vectorized mask must say False."""
+    taps = 255  # n_half = 128 > 64: runs can overflow the 6-bit field
+    q = np.zeros((2, taps), np.int64)
+    q[0, 127] = 3  # centre tap only: runs of 127 zeros… nope: pulse at 127
+    q[1, 0] = q[1, -1] = 1  # pulse at j=0 then 127 zeros: fine (no pulse after)
+    # filter 0: centre pulse at j=127 → zero-run of 127 before it
+    spec = MachineSpec(taps=taps)
+    vm = FirBlmacVMachine(spec)
+    fits = vm.program_bank(q)
+    assert not fits[0] and fits[1]
+    m = FirBlmacMachine(spec)
+    with pytest.raises(ValueError, match="ZRUN"):
+        m.program(q[0])
+    m.program(q[1])
+
+
+def test_vmachine_validation_errors():
+    vm = FirBlmacVMachine(MachineSpec(taps=15))
+    with pytest.raises(RuntimeError, match="not programmed"):
+        vm.run(np.zeros(20))
+    with pytest.raises(ValueError, match="symmetric"):
+        vm.program_bank(np.arange(15))
+    with pytest.raises(ValueError, match="expected"):
+        vm.program_bank(np.zeros((2, 11), np.int64))
+    big = np.full((1, 15), 1 << 20, np.int64)
+    with pytest.raises(ValueError, match="exceed"):
+        vm.program_bank(big)
+    vm.program_bank(random_type1_bank(2, 15, seed=1, density=0.5))
+    with pytest.raises(ValueError, match="samples exceed"):
+        vm.run(np.full(20, 1000))
+    with pytest.raises(ValueError, match="at least"):
+        vm.run(np.zeros(10))
+    with pytest.raises(ValueError, match="1-D"):
+        vm.run(np.zeros((2, 20)))
+
+
+def test_vmachine_default_spec_is_fresh_per_instance():
+    """The MachineSpec-default footgun: two machines must not share one
+    import-time default instance."""
+    a, b = FirBlmacMachine(), FirBlmacMachine()
+    assert a.spec is not b.spec
+    va, vb = FirBlmacVMachine(), FirBlmacVMachine()
+    assert va.spec is not vb.spec
+
+
+def test_vmachine_programs_roundtrip():
+    q = random_type1_bank(3, 31, seed=21, density=0.5)
+    vm = FirBlmacVMachine(MachineSpec(taps=31))
+    vm.program_bank(q)
+    batch = vm.programs()
+    d = csd_digits(q[:, :16], n_digits=16)
+    for b in range(3):
+        assert np.array_equal(batch.stream(b).codes, encode_digits(d[b]).codes)
