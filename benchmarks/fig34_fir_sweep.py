@@ -7,15 +7,20 @@ rounding), count BLMAC additions (Eq. 3 + ntrits), and report
 mean/std/min/max — the quantities plotted in the paper's figures.
 
 Default is the paper's full n_div=100 grid but a thinned tap sweep; pass
-``--full`` for all 101 tap counts (≈7 CPU-minutes, 1.98M filters) or
-``--fast`` for a n_div=40 grid.
+``--full`` for all 101 tap counts (≈7 CPU-minutes serially, 1.98M
+filters) or ``--fast`` for a n_div=40 grid.  ``--jobs N`` fans the
+(window, tap-count) grid across a process pool — each cell designs,
+quantizes and counts its bank independently, so this scales to however
+many cores the machine has (window vectors are memoized per process).
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import os
 import pathlib
 import time
+from concurrent.futures import ProcessPoolExecutor
 
 import numpy as np
 
@@ -41,41 +46,58 @@ PAPER = {
 OUT = pathlib.Path(__file__).resolve().parent / "out"
 
 
-def run_window(window_name: str, taps_list, n_div: int, verbose=True):
+def _grid_row(args) -> dict:
+    """One (window, tap count) cell of the sweep grid — a self-contained
+    unit of work, picklable for the ``--jobs`` process pool."""
+    window_name, taps, n_div = args
     window = "hamming" if window_name == "hamming" else ("kaiser", KAISER_BETA)
     specs = sweep_specs(n_div)
+    bank = sweep_bank(taps, n_div, window, specs)
+    q, _ = po2_quantize_batch(bank, bits=16)
+    adds = fir_blmac_additions_batch(q)
+    return dict(
+        window=window_name, taps=taps, n_filters=len(specs),
+        mean=float(adds.mean()), std=float(adds.std()),
+        min=int(adds.min()), max=int(adds.max()),
+        adds_per_coeff=float(adds_per_coeff(adds, taps).mean()),
+        adds_per_tap=float(adds_per_tap(adds, taps).mean()),
+        classical_equiv=classical_equivalent_adds(taps),
+    )
+
+
+def _print_row(r: dict) -> None:
+    print(f"  {r['window']:7s} N={r['taps']:3d}  B_N={r['mean']:6.1f}±{r['std']:5.1f} "
+          f"[{r['min']},{r['max']}]  adds/coeff={r['adds_per_coeff']:.2f} "
+          f"adds/tap={r['adds_per_tap']:.2f}  vs classical {r['classical_equiv']} "
+          f"({r['classical_equiv']/r['mean']:.2f}x)")
+
+
+def run_window(window_name: str, taps_list, n_div: int, verbose=True):
     rows = []
     for taps in taps_list:
-        bank = sweep_bank(taps, n_div, window, specs)
-        q, _ = po2_quantize_batch(bank, bits=16)
-        adds = fir_blmac_additions_batch(q)
-        rows.append(dict(
-            window=window_name, taps=taps, n_filters=len(specs),
-            mean=float(adds.mean()), std=float(adds.std()),
-            min=int(adds.min()), max=int(adds.max()),
-            adds_per_coeff=float(adds_per_coeff(adds, taps).mean()),
-            adds_per_tap=float(adds_per_tap(adds, taps).mean()),
-            classical_equiv=classical_equivalent_adds(taps),
-        ))
+        rows.append(_grid_row((window_name, taps, n_div)))
         if verbose:
-            r = rows[-1]
-            print(f"  {window_name:7s} N={taps:3d}  B_N={r['mean']:6.1f}±{r['std']:5.1f} "
-                  f"[{r['min']},{r['max']}]  adds/coeff={r['adds_per_coeff']:.2f} "
-                  f"adds/tap={r['adds_per_tap']:.2f}  vs classical {r['classical_equiv']} "
-                  f"({r['classical_equiv']/r['mean']:.2f}x)")
+            _print_row(rows[-1])
     return rows
 
 
-def run(mode: str = "default", verbose: bool = True):
+def run(mode: str = "default", verbose: bool = True, jobs: int = 1):
     if mode == "full":
         taps_list, n_div = list(range(55, 256, 2)), 100
     elif mode == "fast":
         taps_list, n_div = [55, 127, 255], 40
     else:
         taps_list, n_div = [55, 75, 95, 127, 155, 191, 255], 100
-    all_rows = []
-    for w in ("hamming", "kaiser"):
-        all_rows += run_window(w, taps_list, n_div, verbose)
+    grid = [(w, t, n_div) for w in ("hamming", "kaiser") for t in taps_list]
+    if jobs > 1:
+        with ProcessPoolExecutor(max_workers=jobs) as pool:
+            all_rows = list(pool.map(_grid_row, grid, chunksize=1))
+        if verbose:
+            for r in all_rows:
+                _print_row(r)
+    else:
+        all_rows = [r for w in ("hamming", "kaiser")
+                    for r in run_window(w, taps_list, n_div, verbose)]
     OUT.mkdir(exist_ok=True)
     with open(OUT / f"fig34_sweep_{mode}.csv", "w", newline="") as f:
         wtr = csv.DictWriter(f, fieldnames=list(all_rows[0].keys()))
@@ -128,7 +150,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="all 101 tap counts, n_div=100")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--jobs", type=int, default=0, metavar="N",
+                    help="process-pool width for the (window, taps) grid; "
+                         "0 = all cores, 1 = serial")
     a = ap.parse_args()
+    jobs = a.jobs if a.jobs else (os.cpu_count() or 1)
     t0 = time.time()
-    run("full" if a.full else "fast" if a.fast else "default")
-    print(f"done in {time.time()-t0:.1f}s")
+    run("full" if a.full else "fast" if a.fast else "default", jobs=jobs)
+    print(f"done in {time.time()-t0:.1f}s ({jobs} job{'s'[:jobs!=1]})")

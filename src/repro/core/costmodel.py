@@ -8,6 +8,8 @@ plus the comparison baselines the paper uses.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
+
 import numpy as np
 
 from .csd import csd_digits, num_pulses
@@ -21,6 +23,9 @@ __all__ = [
     "classical_equivalent_adds",
     "machine_cycles",
     "machine_cycles_batch",
+    "BankDispatchPlan",
+    "predict_specialized_us",
+    "predict_scheduled_us",
 ]
 
 
@@ -67,6 +72,88 @@ def machine_cycles(
     one cycle per RLE code (pulse or EOR) + fixed per-sample overhead."""
     digits = csd_digits(_half(wq), n_digits=n_layers)
     return code_count(digits) + overhead
+
+
+# ---------------------------------------------------------------------------
+# bank-dispatch cost model (the autotuner's objective function)
+# ---------------------------------------------------------------------------
+#
+# Coarse per-dispatch latency predictions for the two FIR serving paths,
+# in microseconds.  The constants below were FITTED ON THE REFERENCE
+# CONTAINER (CPU, Pallas interpret mode — the machine BENCH_fir.json is
+# recorded on) against `benchmarks/bank_throughput.py` measurements; on a
+# real TPU the absolute numbers are wrong but the *rankings* the
+# autotuner needs (specialized for narrow banks, wide-merge scheduled
+# tiles for wide banks) are driven by the same op-count asymmetics.
+# Accuracy is ±30% on the calibration grid — good enough to pick a
+# dispatch, not to replace measurement.
+
+SPEC_CALL_US = 140.0  # per specialized-program dispatch (B=1 pallas_call)
+SPEC_OP_US = 0.014  # per pulse/fold/shift op, per signal tile
+PALLAS_CALL_US = 500.0  # per scheduled-bank pallas_call dispatch
+STEP_US = 300.0  # per grid step: frame gather + interpret plumbing
+MAC_US = 7e-5  # per int32 multiply-accumulate in a superlayer matmul
+UNPACK_US = 2e-3  # per packed trit unpacked, per grid step
+
+
+@dataclass(frozen=True)
+class BankDispatchPlan:
+    """Autotuner verdict: how to run a (B, taps) bank over C channels.
+
+    ``mode`` is ``"specialized"`` (per-filter pulse-baked programs) or
+    ``"scheduled"`` (occupancy-grouped bank tiles).  ``merge`` is the
+    CSD-layers-per-superlayer fusion factor of the scheduled kernel
+    (1 = paper-pure one matmul per bit layer); ``predicted_us`` is the
+    modelled per-dispatch latency the plan won with.
+    """
+
+    mode: str
+    tile: int
+    bank_tile: int
+    merge: int
+    predicted_us: float
+
+
+def predict_specialized_us(
+    n_filters: int,
+    channels: int,
+    n_tiles: int,
+    taps: int,
+    mean_pulses: float,
+    n_layers: int = 16,
+) -> float:
+    """Modelled latency of the per-filter specialized-program loop: one
+    dispatch per (filter, channel), each executing ~(folds + pulses +
+    layer shifts) vector ops per signal tile."""
+    ops = taps // 2 + mean_pulses + n_layers
+    return n_filters * channels * (SPEC_CALL_US + n_tiles * ops * SPEC_OP_US)
+
+
+def predict_scheduled_us(
+    channels: int,
+    n_tiles: int,
+    tile: int,
+    m_pad: int,
+    groups: "list[tuple[int, int, int, int]]",
+) -> float:
+    """Modelled latency of the scheduled bank path.
+
+    ``groups`` summarizes a `BankSchedule`: one ``(n_bank_tiles,
+    bank_tile, n_superlayers, n_sel_layers)`` tuple per tile group.  Cost
+    per grid step = fixed step overhead + one matmul per superlayer +
+    the unpack of the tile's selected trit layers.
+    """
+    total = 0.0
+    for n_bank_tiles, bank_tile, n_super, n_sel in groups:
+        if n_sel == 0:
+            continue  # zero-fill group: no kernel dispatched
+        step = (
+            STEP_US
+            + n_super * bank_tile * m_pad * tile * MAC_US
+            + n_sel * bank_tile * m_pad * UNPACK_US
+        )
+        total += PALLAS_CALL_US + n_bank_tiles * channels * n_tiles * step
+    return total
 
 
 def machine_cycles_batch(

@@ -25,6 +25,10 @@ __all__ = [
     "pack_trits",
     "unpack_trits",
     "require_type1",
+    "assert_int32_bound",
+    "layer_occupancy",
+    "layer_pulse_counts",
+    "occupancy_signatures",
 ]
 
 
@@ -37,6 +41,62 @@ def require_type1(w, what: str = "filter") -> int:
     if taps % 2 == 0 or not np.array_equal(w2, w2[..., ::-1]):
         raise ValueError(f"{what} needs odd symmetric (type-I) coefficients")
     return taps
+
+
+def assert_int32_bound(w, sample_bits: int = 8, what: str = "filter bank") -> int:
+    """Assert the BLMAC accumulator fits int32 — checked ONCE at pack time.
+
+    This is the §2.1 claim ("16-bit coeffs × 8-bit samples × ≤255 taps fits
+    32 bits") made load-bearing: every BLMAC accumulator in this repo —
+    the Pallas kernels, `blmac_fir_dynamic`, `FilterBankEngine` — carries
+    int32, so this single pack-time check covers every call site.
+
+    The checked quantity is the final-sum bound Σ|w_j|·max|x| plus a
+    partial-Horner slack of 2·M·max|x|: after processing layers ≥ lo the
+    accumulator holds (w_prefix/2^lo)·u, and a signed-CSD prefix can
+    exceed |w| by the discarded NAF tail (< 2^lo per coefficient) — e.g.
+    NAF(7) = +8−1, whose prefix is 8.  That slack is ≤ 2·max|x| per
+    folded row, taps·max|x| total, far below the headroom at the paper's
+    operating point (255·2^15·2^7 ≈ 2^30).  Returns the final-sum bound.
+    """
+    w2 = np.atleast_2d(np.asarray(w, np.int64))
+    taps = w2.shape[-1]
+    xmax = np.int64(1) << (sample_bits - 1)
+    bound = int(np.abs(w2).sum(axis=-1).max(initial=0) * xmax)
+    slack = (taps // 2 + 1) * int(xmax) * 2  # NAF-prefix excess, see above
+    if bound + slack >= 1 << 31:
+        raise OverflowError(
+            f"{what}: worst-case accumulator Σ|w|·2^{sample_bits - 1} "
+            f"(+{slack} partial-sum slack) = {bound + slack} overflows "
+            f"int32 — reduce coeff bits, taps, or sample_bits"
+        )
+    return bound
+
+
+def layer_occupancy(digits: np.ndarray) -> np.ndarray:
+    """(…, M, L) CSD digits → bool (…, L): which bit layers hold ≥1 pulse.
+
+    The layer-skip schedule of the bank kernel is built from this: a layer
+    empty across a whole bank tile costs zero kernel iterations.
+    """
+    return np.any(np.asarray(digits) != 0, axis=-2)
+
+
+def layer_pulse_counts(digits: np.ndarray) -> np.ndarray:
+    """(…, M, L) CSD digits → int64 (…, L) pulses per bit layer (the
+    autotuner's per-layer work predictor)."""
+    return np.count_nonzero(np.asarray(digits), axis=-2).astype(np.int64)
+
+
+def occupancy_signatures(occ: np.ndarray) -> np.ndarray:
+    """Bool (…, L) occupancy → uint64 (…,) bitmask (bit i = layer i
+    populated).  Filters sharing a signature schedule identically, so
+    sorting on it groups bank tiles into occupancy-homogeneous runs."""
+    occ = np.asarray(occ, bool)
+    if occ.shape[-1] > 64:
+        raise ValueError("occupancy signatures support at most 64 layers")
+    weights = np.uint64(1) << np.arange(occ.shape[-1], dtype=np.uint64)
+    return (occ * weights).sum(axis=-1, dtype=np.uint64)
 
 
 def _as_int64(w) -> np.ndarray:

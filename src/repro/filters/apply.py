@@ -106,6 +106,10 @@ def fir_bit_layers_batch(x: np.ndarray, w: np.ndarray) -> np.ndarray:
     )  # (C, T', M)
     digits = csd_digits(w2[:, : half + 1])  # (B, M, L) LSB-first
     acc = np.zeros((w2.shape[0], data.shape[0], data.shape[1]), np.int64)
+    # Deliberately the naive dense Eq. 2 recursion — NO layer-skip or
+    # superlayer merging: this is the independent oracle the scheduled
+    # Pallas kernel is differentially verified against, so it must not
+    # share the schedule mechanism under test.
     for layer in range(digits.shape[2] - 1, -1, -1):  # MSB → LSB
         acc <<= 1
         acc += np.einsum("bm,ctm->bct", digits[:, :, layer], data)

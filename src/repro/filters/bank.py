@@ -1,6 +1,6 @@
 """Streaming filter-bank engine: overlap-save BLMAC over B filters × C channels.
 
-`FilterBankEngine` is the serving-side face of the batched bank kernel
+`FilterBankEngine` is the serving-side face of the scheduled bank kernel
 (`repro.kernels.blmac_fir_bank`): feed it arbitrary-length chunks of a
 multi-channel sample stream and it returns, for every filter in the bank,
 the output samples that became computable — carrying the ``taps − 1``
@@ -10,15 +10,26 @@ produce one gapless output stream per (filter, channel) pair.
 Mode selection mirrors the hardware trade-off:
 
   * ``"specialized"`` — per-filter pulse-baked programs from the LRU
-    program cache; wins for small banks where per-call overhead is
+    program cache; wins for narrow banks where per-call overhead is
     amortized and the add count is exactly the pulse count.
-  * ``"packed"``      — ONE `pallas_call` for the whole bank on packed
-    uint32 trit words; wins as soon as the bank is wide enough that
-    batching beats per-filter dispatch (default crossover: 8 filters).
-  * ``"auto"``        — pick by bank size (the default).
+  * ``"packed"``      — the scheduled bank path: filters sorted into
+    occupancy-homogeneous bank tiles at construction time
+    (`plan_bank_schedule`), each tile group one `pallas_call` iterating
+    ONLY its populated superlayers, packed uint32 trit operands resident
+    on device across pushes.
+  * ``"auto"``        — the default: `autotune_bank_dispatch` runs both
+    candidates (and the scheduled tile/merge grid) through the
+    calibrated cost model in `repro.core.costmodel` and keeps the
+    winner's plan — no threshold guessing.
 
-Bit-exactness: both modes agree with `repro.filters.fir_bit_layers_batch`
-to the last bit on integer inputs (property-tested in `tests/test_bank.py`).
+Arithmetic contract: int32 throughout.  The §2.1 bound (16-bit coeffs ×
+8-bit samples × ≤255 taps) is asserted ONCE, inside `pack_bank_trits`
+at construction — neither `push` nor the kernels re-check it, and
+`blmac_fir_dynamic` documents the identical guarantee.
+
+Bit-exactness: all modes agree with `repro.filters.fir_bit_layers_batch`
+to the last bit on integer inputs (property-tested in `tests/test_bank.py`
+and `tests/differential.py`).
 """
 from __future__ import annotations
 
@@ -27,9 +38,14 @@ import jax.numpy as jnp
 
 from ..core.csd import require_type1
 
+from ..kernels.runtime import DEFAULT_TILE
+
+# Legacy crossover (filters below → specialized) — superseded by the
+# autotuner for mode="auto"; kept because external callers used it to
+# pre-decide a forced mode.
 SPECIALIZE_THRESHOLD = 8
 
-__all__ = ["FilterBankEngine", "SPECIALIZE_THRESHOLD"]
+__all__ = ["FilterBankEngine", "SPECIALIZE_THRESHOLD", "DEFAULT_TILE"]
 
 
 class FilterBankEngine:
@@ -41,24 +57,38 @@ class FilterBankEngine:
         Quantized odd symmetric (type-I) coefficients, one row per filter.
     channels : int
         Number of independent input channels C (all filtered by every filter).
-    tile : int
+    tile : int | None
         Output samples per kernel grid step (lane-parallel width).
-    mode : {"auto", "packed", "specialized"}
+        ``None`` lets the autotuner pick (falls back to ``DEFAULT_TILE``
+        for forced modes).
+    mode : {"auto", "packed", "scheduled", "specialized"}
+        ``"scheduled"`` is an alias for ``"packed"``.
+    bank_tile : int | None
+        Filters per bank tile of the scheduled kernel (None = heuristic).
+    merge : int | None
+        CSD layers fused per superlayer matmul (None = kernel default;
+        1 = paper-pure one matmul per bit layer).
     interpret : bool | None
         Pallas interpret override; None = backend default.
+    chunk_hint : int
+        Expected samples per push, the autotuner's amortization knob
+        (streaming chunks are short; batch jobs long).
     """
 
     def __init__(
         self,
         qbank: np.ndarray,
         channels: int = 1,
-        tile: int = 512,
+        tile: int | None = None,
         mode: str = "auto",
         bank_tile: int | None = None,
         interpret: bool | None = None,
+        merge: int | None = None,
+        chunk_hint: int = 2048,
     ):
-        from ..kernels.blmac_fir import (_pad_to, default_bank_tile,
-                                         pack_bank_trits, pulses_msb_first)
+        from ..kernels.blmac_fir import (MERGE_DEFAULT, pack_bank_trits,
+                                         plan_bank_schedule, pulses_msb_first)
+        from ..kernels.runtime import autotune_bank_dispatch
 
         qbank = np.atleast_2d(np.asarray(qbank, np.int64))
         if qbank.ndim != 2:
@@ -66,39 +96,61 @@ class FilterBankEngine:
         taps = require_type1(qbank, "FilterBankEngine")
         if channels < 1:
             raise ValueError("channels must be >= 1")
+        if mode == "scheduled":
+            mode = "packed"
         if mode not in ("auto", "packed", "specialized"):
             raise ValueError(f"unknown mode {mode!r}")
-        if mode == "auto":
-            mode = (
-                "specialized"
-                if qbank.shape[0] < SPECIALIZE_THRESHOLD
-                else "packed"
-            )
         self.qbank = qbank
         self.n_filters = int(qbank.shape[0])
         self.taps = int(taps)
         self.channels = int(channels)
-        self.tile = int(tile)
-        self.mode = mode
-        self.bank_tile = bank_tile
         self.interpret = interpret
+        # int32 bound asserted in here — once, for every downstream path
+        packed = pack_bank_trits(qbank)
+        self.dispatch_plan = None
+        schedule = None
+        if mode == "auto":
+            self.dispatch_plan, schedule = autotune_bank_dispatch(
+                packed, self.taps, self.channels, tile,
+                chunk_hint=chunk_hint, interpret=interpret,
+            )
+            mode = (
+                "specialized"
+                if self.dispatch_plan.mode == "specialized"
+                else "packed"
+            )
+            if tile is None:
+                tile = self.dispatch_plan.tile
+            if bank_tile is None and schedule is not None:
+                bank_tile = schedule.tile_size
+            if merge is None and schedule is not None:
+                merge = schedule.merge
+        self.tile = int(tile) if tile is not None else DEFAULT_TILE
+        self.mode = mode
+        self.merge = merge if merge is not None else MERGE_DEFAULT
         if mode == "packed":
-            # pad + int32-view + upload the packed bank ONCE; push() then
-            # feeds a device-resident operand instead of re-staging the
-            # whole bank every chunk
-            packed = pack_bank_trits(qbank)  # (B, L, W) uint32
-            self.bank_tile = bank_tile or default_bank_tile(self.n_filters)
-            b_pad = _pad_to(self.n_filters, self.bank_tile)
-            if b_pad != self.n_filters:
-                packed = np.concatenate([
-                    packed,
-                    np.zeros((b_pad - self.n_filters,) + packed.shape[1:],
-                             packed.dtype),
-                ])
-            self._packed = jnp.asarray(packed.view(np.int32))
+            # plan once (sort, group, compact layers), upload each tile
+            # group's packed operand ONCE; push() then feeds device-
+            # resident operands instead of re-staging the bank every chunk.
+            # An autotuned schedule is reused only when it matches the
+            # caller's explicit bank_tile/merge overrides.
+            if (
+                schedule is None
+                or (bank_tile is not None and bank_tile != schedule.tile_size)
+                or schedule.merge != self.merge
+            ):
+                schedule = plan_bank_schedule(packed, bank_tile, self.merge)
+            self.bank_schedule = schedule
+            self.bank_tile = schedule.tile_size
+            self._group_ops = [
+                jnp.asarray(g.packed.view(np.int32)) if g.sel_layers else None
+                for g in schedule.groups
+            ]
             self._schedules = None
         else:
-            self._packed = None
+            self.bank_schedule = None
+            self.bank_tile = bank_tile
+            self._group_ops = None
             self._schedules = [pulses_msb_first(row) for row in qbank]
         # overlap-save state: the last taps-1 samples of every channel
         self._tail = np.zeros((channels, 0), np.int32)
@@ -183,7 +235,9 @@ class FilterBankEngine:
     # -- one-shot application ----------------------------------------------
 
     def _apply(self, buf: np.ndarray) -> np.ndarray:
-        from ..kernels.blmac_fir import blmac_fir_bank, blmac_fir_specialized
+        from ..kernels.blmac_fir import (bank_schedule_apply, blmac_fir_specialized,
+                                         frame_signal_batch)
+        from ..kernels.runtime import resolve_interpret
 
         n = buf.shape[1]
         n_out = n - self.taps + 1
@@ -196,21 +250,16 @@ class FilterBankEngine:
             buf = np.pad(buf, ((0, 0), (0, n_pad - n)))
         x = jnp.asarray(buf, jnp.int32)
         if self.mode == "packed":
-            from ..kernels.blmac_fir import _bank_call, frame_signal_batch
-            from ..kernels.runtime import resolve_interpret
-
             frames, _ = frame_signal_batch(x, self.taps, self.tile)
-            y = _bank_call(
+            y = bank_schedule_apply(
                 frames,
-                self._packed,
+                self.bank_schedule,
                 self.taps,
-                int(self._packed.shape[1]),
                 self.tile,
-                self.bank_tile,
                 resolve_interpret(self.interpret),
-            )  # (B_pad, C, n_tiles, tile)
-            y = y.reshape(y.shape[0], self.channels, -1)
-            return np.asarray(y[: self.n_filters, :, :n_out])
+                device_groups=self._group_ops,
+            )  # (B, C, n_tiles * tile), caller order restored
+            return np.asarray(y[:, :, :n_out])
         out = np.empty((self.n_filters, self.channels, n_out), np.int32)
         for b, pulses in enumerate(self._schedules):
             for c in range(self.channels):

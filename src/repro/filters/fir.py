@@ -10,6 +10,8 @@ Normalized frequencies follow scipy's convention: Nyquist = 1.0.
 """
 from __future__ import annotations
 
+import functools
+from concurrent.futures import ProcessPoolExecutor
 from typing import Literal, Sequence
 
 import numpy as np
@@ -33,13 +35,28 @@ def bands_for(kind: FilterKind, cutoff: float | tuple[float, float]) -> np.ndarr
     raise ValueError(f"unknown filter kind {kind!r}")
 
 
+@functools.lru_cache(maxsize=256)
+def _window_cached(numtaps: int, key) -> np.ndarray:
+    w = np.hamming(numtaps) if key == "hamming" else np.kaiser(numtaps, key[1])
+    w.setflags(write=False)  # memoized: callers share one read-only array
+    return w
+
+
 def window_values(numtaps: int, window: str | tuple = "hamming") -> np.ndarray:
-    """Symmetric window samples; supports the paper's two windows."""
+    """Symmetric window samples; supports the paper's two windows.
+
+    Memoized per (numtaps, window): the §3.1 sweep designs 9,900 filters
+    per tap count and the window vector is identical for all of them —
+    and for every repeat visit of that tap count.  Returns a READ-ONLY
+    array; copy before mutating.
+    """
     if window == "hamming":
-        return np.hamming(numtaps)
-    if isinstance(window, tuple) and window[0] == "kaiser":
-        return np.kaiser(numtaps, float(window[1]))
-    raise ValueError(f"unsupported window {window!r}")
+        key = "hamming"
+    elif isinstance(window, tuple) and window[0] == "kaiser":
+        key = ("kaiser", float(window[1]))
+    else:
+        raise ValueError(f"unsupported window {window!r}")
+    return _window_cached(numtaps, key)
 
 
 def firwin_batch(
@@ -47,6 +64,7 @@ def firwin_batch(
     bands: Sequence[np.ndarray],
     window: str | tuple = "hamming",
     scale: bool = True,
+    workers: int | None = None,
 ) -> np.ndarray:
     """Design ``len(bands)`` filters of ``numtaps`` taps at once.
 
@@ -54,9 +72,22 @@ def firwin_batch(
     float64 (n_filters, numtaps).  Matches scipy.signal.firwin bit-for-bit
     up to float roundoff (same summed-sinc construction, same passband-
     centre scaling rule).
+
+    ``workers`` > 1 splits the bank across a process pool — every filter
+    is designed independently (the passband-centre scaling is per-filter),
+    so chunked results concatenate exactly.  Worth it from ~10⁵ (filter ×
+    tap) products; the §3.1 sweep is ~10⁶ per tap count.
     """
     if numtaps % 2 == 0:
         raise ValueError("type-I FIR filters need an odd tap count")
+    if workers and workers > 1 and len(bands) >= 4 * workers:
+        chunks = np.array_split(np.arange(len(bands)), workers)
+        with ProcessPoolExecutor(max_workers=workers) as pool:
+            parts = pool.map(
+                _firwin_chunk,
+                [(numtaps, [bands[i] for i in c], window, scale) for c in chunks],
+            )
+        return np.concatenate(list(parts), axis=0)
     nf = len(bands)
     m = np.arange(numtaps, dtype=np.float64) - (numtaps - 1) / 2.0  # (T,)
     # Flatten all bands with an owner index so one vector pass handles
@@ -81,6 +112,12 @@ def firwin_batch(
         s = np.einsum("ft,ft->f", h, c)
         h /= s[:, None]
     return h
+
+
+def _firwin_chunk(args) -> np.ndarray:
+    """Process-pool worker: design one contiguous slice of a bank."""
+    numtaps, bands, window, scale = args
+    return firwin_batch(numtaps, bands, window, scale)
 
 
 def design_bank(

@@ -46,12 +46,18 @@ def sweep_bank(
     n_div: int = 100,
     window: str | tuple = "hamming",
     specs: Sequence[SweepSpec] | None = None,
+    workers: int | None = None,
 ) -> np.ndarray:
-    """Design the full (n_div*(n_div-1), numtaps) bank for one tap count."""
+    """Design the full (n_div*(n_div-1), numtaps) bank for one tap count.
+
+    ``workers`` fans the design across a process pool (see
+    `firwin_batch`); the window vector itself is memoized, so repeat
+    visits of a tap count reuse it."""
     if specs is None:
         specs = sweep_specs(n_div)
     return firwin_batch(
-        numtaps, [bands_for(s.kind, s.cutoff) for s in specs], window
+        numtaps, [bands_for(s.kind, s.cutoff) for s in specs], window,
+        workers=workers,
     )
 
 
@@ -59,8 +65,9 @@ def iter_sweep(
     n_div: int = 100,
     taps: Sequence[int] = TAPS_RANGE,
     window: str | tuple = "hamming",
+    workers: int | None = None,
 ) -> Iterator[tuple[int, np.ndarray]]:
     """Yield (numtaps, bank) across the tap sweep."""
     specs = sweep_specs(n_div)
     for t in taps:
-        yield t, sweep_bank(t, n_div, window, specs)
+        yield t, sweep_bank(t, n_div, window, specs, workers=workers)

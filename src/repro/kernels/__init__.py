@@ -2,9 +2,12 @@
 
   blmac_fir       — pulse-specialized bit-layer FIR (the paper's machine,
                     lane-parallelized; exact int32), LRU program cache
-  blmac_fir_bank  — ONE pallas_call applying a B-filter bank to a
-                    C-channel signal: packed-trit operands, one integer
-                    matmul per bit layer (the 1.98M-filter sweep path)
+  blmac_fir_bank  — sparsity-scheduled bank kernel: occupancy-grouped
+                    bank tiles, layer-skip superlayer schedules, one
+                    integer matmul per populated superlayer (the
+                    1.98M-filter sweep path); B=1 fast-paths to the
+                    specialized program
+  autotune_bank_dispatch — cost-model dispatch planner for the above
   blmac_matmul    — CSD-P pulse-code quantized matmul (serving-side weight
                     decompression; attacks the decode memory roofline)
 """
@@ -16,13 +19,19 @@ from .ops import (
     pulse_matmul_op,
     pulse_quantize,
 )
-from .blmac_fir import pack_bank_trits
+from .blmac_fir import (BankSchedule, pack_bank_trits, plan_bank_schedule,
+                        superlayer_schedule)
+from .runtime import autotune_bank_dispatch
 from . import ref
 
 __all__ = [
     "blmac_fir",
     "blmac_fir_bank",
+    "BankSchedule",
     "pack_bank_trits",
+    "plan_bank_schedule",
+    "superlayer_schedule",
+    "autotune_bank_dispatch",
     "default_interpret",
     "pulse_dequantize",
     "pulse_matmul_op",

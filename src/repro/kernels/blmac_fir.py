@@ -3,8 +3,9 @@
 TPU adaptation of the paper's machine (DESIGN.md §2): the FPGA executes one
 add per pulse per *sample*; these kernels execute one VPU vector add per
 pulse per *tile of output samples* (lane-parallel, pulse-serial).  The
-symmetric pre-add (Eq. 3) is fused.  All arithmetic is exact int32
-(§2.1: 16-bit coeffs × 8-bit samples × ≤255 taps fits 32 bits).
+symmetric pre-add (Eq. 3) is fused.  All arithmetic is exact int32 — the
+§2.1 bound (16-bit coeffs × 8-bit samples × ≤255 taps fits 32 bits) is
+asserted ONCE at pack time (`core.csd.assert_int32_bound`), not per call.
 
 Three modes:
 
@@ -14,18 +15,31 @@ Three modes:
     model *is* the instruction count.  One (cheap) recompile per distinct
     pulse schedule, held in an LRU cache (`specialized_program`), exactly
     like reprogramming the FPGA weight memory.
-  * **bank** — the workhorse for filter *banks*: one `pallas_call` over a
+  * **bank** — the workhorse for filter *banks*: a `pallas_call` over a
     3-D grid `(bank_tile, channel, signal_tile)` applies B filters to C
     channels.  Trits travel as **packed uint32 words** (16 two-bit trit
     codes per word, `core.csd.pack_trits` layout: 0b00=0, 0b01=+1,
-    0b11=−1) and are unpacked in-kernel with shifts and masks.  Each grid
-    step builds the framed `(M, tile)` window matrix ONCE with a single
-    gather and reuses it for every filter in the bank tile; each bit
-    layer is then one `(bank_tile, M) @ (M, tile)` integer matmul —
-    Horner over layers, matmul over the bank.
-  * **dynamic** — legacy single-filter runtime-trit entry point, now a
-    B=1 bank call (kept for API compatibility and as the per-filter
-    baseline in `benchmarks/bank_throughput.py`).
+    0b11=−1, signed CSD end-to-end — ~2× fewer pulses than binary
+    layers, paper Tab. 3) and are unpacked in-kernel with shifts and
+    masks.  Each grid step builds the framed `(M, tile)` window matrix
+    ONCE with a single gather and reuses it for every surviving layer
+    and every filter in the bank tile.
+
+    The Horner loop is **schedule-driven**, not fixed-length: at pack
+    time `plan_bank_schedule` sorts the filters by layer-occupancy
+    signature, partitions them into occupancy-homogeneous bank tiles,
+    and emits per-tile-group schedules of *superlayers* — runs of
+    ``merge`` adjacent CSD layers contracted in one
+    ``(bank_tile, M) @ (M, tile)`` integer matmul, with one
+    ``acc << shift`` per populated superlayer.  Bit layers empty across
+    the whole tile cost **zero** kernel work (layer-skip); the schedule
+    is static per compiled signature and jit-cached exactly like
+    `specialized_program`.
+  * **dynamic** — legacy single-filter runtime-trit entry point: a B=1
+    scheduled bank call whose compile cache is keyed on layer occupancy,
+    not the pulse list (trits stay a runtime operand).  `blmac_fir_bank`
+    itself fast-paths B≤1 *packed* banks to the specialized program —
+    the route that erased the PR-1 B=1 framing regression.
 
 Input layout: the host frames each channel into overlapping tiles
 (n_tiles, tile + taps − 1 padded to a lane multiple); BlockSpec then maps
@@ -36,13 +50,16 @@ BlockSpecs and is counted in the roofline maths.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from ..core.csd import csd_digits, pack_trits, require_type1
+from ..core.csd import (assert_int32_bound, csd_decode, csd_digits,
+                        occupancy_signatures, pack_trits, require_type1,
+                        unpack_trits)
 from .runtime import resolve_interpret
 
 LANE = 128
@@ -171,67 +188,100 @@ def blmac_fir_specialized(
 
 
 # ---------------------------------------------------------------------------
-# batched bank kernel (packed-trit operands, 3-D grid)
+# batched bank kernel (packed-trit operands, 3-D grid, layer-skip schedule)
 # ---------------------------------------------------------------------------
 
 def _fir_kernel_bank(
-    frame_ref, packed_ref, out_ref, *, taps, tile, n_layers, bank_tile, n_words
+    frame_ref, packed_ref, out_ref, *, taps, tile, schedule, tail_shift,
+    bank_tile, n_words
 ):
     """One grid step = one (bank tile × signal tile) block of one channel.
 
     `packed_ref` holds 2-bit trit codes, 16 per uint32 word (viewed as
     int32 — the `& 3` mask makes arithmetic vs logical shift moot), laid
-    out (bank_tile, n_layers, n_words) over the folded half-filter.
+    out (bank_tile, n_sel, n_words) over the folded half-filter, where
+    the n_sel slices are ONLY the bit layers populated somewhere in this
+    bank tile (MSB first — see `plan_bank_schedule`).
+
+    `schedule` drives the Horner recursion: a static tuple of superlayer
+    entries ``(shift_in, ((sel_idx, rel_weight), ...))``, MSB first.  Each
+    entry shifts the accumulator left by the layer gap to the previous
+    superlayer, sums its ``merge``-adjacent trit layers into one small-
+    integer digit matrix, and contracts it against the shared window
+    matrix in ONE ``(bank_tile, M) @ (M, tile)`` integer matmul.  Layers
+    (and whole superlayers) empty across the tile appear nowhere: the
+    emitted program length tracks the occupancy, not the worst case.
     """
     fx = frame_ref[0, 0, :].astype(jnp.int32)
     frame_len = fx.shape[0]
     half = taps // 2
     m_pad = n_words * TRITS_PER_WORD
     # The framed (M, tile) window matrix: one gather, built once per grid
-    # step, shared by every filter in the bank tile.  Row j holds the
-    # symmetric fold u_j[t] = x[t+j] + x[t+taps-1-j] (centre row: no fold);
-    # rows past the centre are zero and meet only zero trits.
+    # step, shared by every superlayer and every filter in the bank tile.
+    # Row j holds the symmetric fold u_j[t] = x[t+j] + x[t+taps-1-j]
+    # (centre row: no fold); rows past the centre are zero and meet only
+    # zero trits.
     j = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tile), 0)
     t = jax.lax.broadcasted_iota(jnp.int32, (m_pad, tile), 1)
     fwd = fx[jnp.minimum(j + t, frame_len - 1)]
     rev = fx[jnp.clip(taps - 1 - j + t, 0, frame_len - 1)]
     u = jnp.where(j < half, fwd + rev, jnp.where(j == half, fwd, 0))
 
-    words = packed_ref[...]  # (bank_tile, n_layers, n_words) int32
+    words = packed_ref[...]  # (bank_tile, n_sel, n_words) int32
     shifts = 2 * jax.lax.broadcasted_iota(
         jnp.int32, (n_words, TRITS_PER_WORD), 1
     )
-    acc = jnp.zeros((bank_tile, tile), jnp.int32)
-    for layer in range(n_layers - 1, -1, -1):  # MSB → LSB Horner
-        codes = (words[:, layer, :, None] >> shifts[None]) & 3
+
+    def trit_layer(sel_idx):
+        codes = (words[:, sel_idx, :, None] >> shifts[None]) & 3
         d = (codes == 1).astype(jnp.int32) - (codes == 3).astype(jnp.int32)
-        d = d.reshape(bank_tile, m_pad)
-        # one integer matmul per bit layer: every pulse in the tile is one
-        # lane-parallel add inside this contraction
-        acc = (acc << 1) + jnp.dot(d, u, preferred_element_type=jnp.int32)
+        return d.reshape(bank_tile, m_pad)
+
+    acc = jnp.zeros((bank_tile, tile), jnp.int32)
+    for shift_in, parts in schedule:  # MSB → LSB over populated superlayers
+        if shift_in:
+            acc = acc << shift_in
+        d = None
+        for sel_idx, rel in parts:
+            dl = trit_layer(sel_idx)
+            if rel:
+                dl = dl << rel
+            d = dl if d is None else d + dl
+        # one integer matmul per populated superlayer: every pulse in the
+        # tile is one lane-parallel add inside this contraction
+        acc = acc + jnp.dot(d, u, preferred_element_type=jnp.int32)
+    if tail_shift:
+        acc = acc << tail_shift
     out_ref[...] = acc[:, None, None, :]
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("taps", "n_layers", "tile", "bank_tile", "interpret"),
+    static_argnames=(
+        "taps", "schedule", "tail_shift", "tile", "bank_tile", "interpret"
+    ),
 )
 def _bank_call(
     frames: jnp.ndarray,  # (C, n_tiles, frame_len) int32
-    packed: jnp.ndarray,  # (B_pad, n_layers, n_words) int32
+    packed: jnp.ndarray,  # (B_pad, n_sel, n_words) int32, selected layers
     taps: int,
-    n_layers: int,
+    schedule: tuple,
+    tail_shift: int,
     tile: int,
     bank_tile: int,
     interpret: bool,
 ) -> jnp.ndarray:
+    """Scheduled bank call.  jit's static-argument cache makes this the
+    bank analogue of `specialized_program`: one compile per distinct
+    (schedule, geometry) signature, every later dispatch a cache hit."""
     n_chan, n_tiles, frame_len = frames.shape
-    b_pad, _, n_words = packed.shape
+    b_pad, n_sel, n_words = packed.shape
     kern = functools.partial(
         _fir_kernel_bank,
         taps=taps,
         tile=tile,
-        n_layers=n_layers,
+        schedule=schedule,
+        tail_shift=tail_shift,
         bank_tile=bank_tile,
         n_words=n_words,
     )
@@ -240,7 +290,7 @@ def _bank_call(
         grid=(b_pad // bank_tile, n_chan, n_tiles),
         in_specs=[
             pl.BlockSpec((1, 1, frame_len), lambda b, c, s: (c, s, 0)),
-            pl.BlockSpec((bank_tile, n_layers, n_words), lambda b, c, s: (b, 0, 0)),
+            pl.BlockSpec((bank_tile, n_sel, n_words), lambda b, c, s: (b, 0, 0)),
         ],
         out_specs=pl.BlockSpec(
             (bank_tile, 1, 1, tile), lambda b, c, s: (b, c, s, 0)
@@ -250,14 +300,24 @@ def _bank_call(
     )(frames, packed)
 
 
-def pack_bank_trits(qbank: np.ndarray, n_layers: int | None = None) -> np.ndarray:
+def pack_bank_trits(
+    qbank: np.ndarray,
+    n_layers: int | None = None,
+    sample_bits: int = 8,
+) -> np.ndarray:
     """(B, taps) symmetric int coefficients → (B, n_layers, n_words) uint32
     packed trit words over the folded half-filter (M = taps//2 + 1 rows),
-    layer-major so the kernel slices one layer per Horner step."""
+    layer-major so the kernel slices one layer per Horner step.
+
+    The int32 accumulator bound (§2.1) is asserted HERE, once per pack —
+    `blmac_fir_bank`, `blmac_fir_dynamic` and `FilterBankEngine` all
+    consume packed operands and inherit the guarantee for ``sample_bits``
+    inputs (default 8-bit, the paper's operating point)."""
     qbank = np.asarray(qbank, np.int64)
     if qbank.ndim != 2:
         raise ValueError("qbank must be (n_filters, taps)")
     taps = require_type1(qbank, "bank kernel")
+    assert_int32_bound(qbank, sample_bits, "bank kernel")
     half = taps // 2
     digits = csd_digits(qbank[:, : half + 1], n_digits=n_layers)  # (B, M, L)
     return pack_trits(np.swapaxes(digits, 1, 2))  # (B, L, n_words)
@@ -274,6 +334,184 @@ def default_bank_tile(n_filters: int) -> int:
     return _pad_to(-(-n // n_tiles), 8)
 
 
+# ---------------------------------------------------------------------------
+# bank-wide sparsity schedule (pack-time planning)
+# ---------------------------------------------------------------------------
+
+# CSD layers fused per superlayer matmul (see plan_bank_schedule): the
+# measured optimum on the reference machine; 1 recovers the paper-pure
+# one-matmul-per-bit-layer kernel, 7 keeps superlayer digits in int8
+# range for MXU operand packing.
+MERGE_DEFAULT = 8
+
+
+def superlayer_schedule(
+    populated: tuple[int, ...], merge: int
+) -> tuple[tuple, int, tuple[int, ...]]:
+    """Compile a populated-layer set into a static Horner schedule.
+
+    ``populated`` are the bit-layer indices holding ≥1 pulse anywhere in
+    the bank tile.  Greedy MSB-first, layers within a span of ``merge``
+    positions fuse into one superlayer (digit values then span
+    ±(2^merge − 1), still far inside int32 given the pack-time bound).
+
+    Returns ``(schedule, tail_shift, sel_layers)``:
+      * ``schedule`` — tuple of ``(shift_in, ((sel_idx, rel_weight), …))``
+        entries, MSB first, consumed verbatim by `_fir_kernel_bank`;
+      * ``tail_shift`` — final left shift down to layer 0;
+      * ``sel_layers`` — the packed-layer indices to gather, MSB first
+        (``sel_idx`` indexes this tuple).
+    """
+    if merge < 1:
+        raise ValueError("merge must be >= 1")
+    layers = sorted((int(l) for l in populated), reverse=True)
+    if not layers:
+        return (), 0, ()
+    runs: list[list[int]] = [[layers[0]]]
+    for l in layers[1:]:
+        if runs[-1][0] - l < merge:  # span (hi − lo) stays < merge
+            runs[-1].append(l)
+        else:
+            runs.append([l])
+    schedule = []
+    sel_layers: list[int] = []
+    prev_lo = None
+    for run in runs:  # each run: descending layer indices
+        lo = run[-1]
+        shift_in = 0 if prev_lo is None else prev_lo - lo
+        parts = tuple(
+            (len(sel_layers) + i, l - lo) for i, l in enumerate(run)
+        )
+        sel_layers.extend(run)
+        schedule.append((shift_in, parts))
+        prev_lo = lo
+    return tuple(schedule), prev_lo, tuple(sel_layers)
+
+
+@dataclass(frozen=True)
+class TileGroup:
+    """A run of consecutive (post-sort) bank tiles sharing one compiled
+    schedule — dispatched as one `pallas_call` with a tile-count grid."""
+
+    schedule: tuple  # static Horner program (see superlayer_schedule)
+    tail_shift: int
+    sel_layers: tuple[int, ...]  # packed layer indices gathered, MSB first
+    packed: np.ndarray  # (n_tiles * bank_tile, n_sel, n_words) uint32
+    n_filters: int  # valid (non-pad) rows covered by this group
+
+
+@dataclass(frozen=True)
+class BankSchedule:
+    """Pack-time product of `plan_bank_schedule`: occupancy-sorted filter
+    permutation + per-group layer-skip schedules."""
+
+    tile_size: int  # bank_tile
+    merge: int
+    perm: np.ndarray  # (B,) original index of the filter in permuted slot p
+    inv: np.ndarray  # (B,) permuted slot of original filter b
+    groups: tuple[TileGroup, ...]
+    n_filters: int
+
+    @property
+    def n_superlayers(self) -> int:
+        """Total scheduled matmuls per grid step, summed over groups —
+        the quantity the dense kernel fixed at n_layers per tile."""
+        return sum(len(g.schedule) for g in self.groups)
+
+
+def plan_bank_schedule(
+    packed: np.ndarray,
+    bank_tile: int | None = None,
+    merge: int = MERGE_DEFAULT,
+) -> BankSchedule:
+    """Sort a packed bank into occupancy-homogeneous tiles and compile a
+    layer-skip schedule per tile group.
+
+    Filters are ordered by their layer-occupancy signature (a bitmask of
+    populated layers), partitioned into ``bank_tile`` rows, and each
+    tile's schedule is built from the UNION occupancy of its rows — so a
+    tile of truncated / low-precision / narrow-band filters never pays
+    for layers only its neighbours populate.  Consecutive tiles with an
+    identical schedule fuse into one `pallas_call` (one `TileGroup`).
+    A tile whose union is empty (all-zero filters) is scheduled as a
+    constant zero block — no kernel runs at all.
+    """
+    packed = np.asarray(packed)
+    n_filters, n_layers, n_words = packed.shape
+    if bank_tile is None:
+        bank_tile = default_bank_tile(n_filters)
+    occ = packed.any(axis=-1)  # (B, L) bool: layer populated in filter b
+    sig = occupancy_signatures(occ)
+    perm = np.argsort(sig, kind="stable")
+    inv = np.empty(n_filters, np.int64)
+    inv[perm] = np.arange(n_filters)
+    b_pad = _pad_to(n_filters, bank_tile)
+    occ_p = np.zeros((b_pad, n_layers), bool)
+    occ_p[:n_filters] = occ[perm]
+    packed_p = np.zeros((b_pad, n_layers, n_words), packed.dtype)
+    packed_p[:n_filters] = packed[perm]
+
+    groups: list[TileGroup] = []
+    run_tiles: list[int] = []  # tile indices of the open run
+    run_key = None
+    n_tiles = b_pad // bank_tile
+
+    def close_run():
+        if not run_tiles:
+            return
+        schedule, tail_shift, sel_layers = run_key
+        lo = run_tiles[0] * bank_tile
+        hi = (run_tiles[-1] + 1) * bank_tile
+        sel = (
+            packed_p[lo:hi][:, list(sel_layers), :]
+            if sel_layers
+            else packed_p[lo:hi, :0, :]
+        )
+        groups.append(
+            TileGroup(
+                schedule=schedule,
+                tail_shift=tail_shift,
+                sel_layers=sel_layers,
+                packed=np.ascontiguousarray(sel),
+                n_filters=min(hi, n_filters) - min(lo, n_filters),
+            )
+        )
+
+    for ti in range(n_tiles):
+        union = occ_p[ti * bank_tile : (ti + 1) * bank_tile].any(axis=0)
+        key = superlayer_schedule(tuple(np.nonzero(union)[0]), merge)
+        if key != run_key:
+            close_run()
+            run_tiles = []
+            run_key = key
+        run_tiles.append(ti)
+    close_run()
+    return BankSchedule(
+        tile_size=bank_tile,
+        merge=merge,
+        perm=perm,
+        inv=inv,
+        groups=tuple(groups),
+        n_filters=n_filters,
+    )
+
+
+def pulses_from_packed(packed_row: np.ndarray, taps: int):
+    """(n_layers, n_words) packed trits → MSB-first static pulse tuple
+    (the `specialized_program` input) — the small-bank fast path's bridge
+    from the bank operand format to the pulse-baked kernel."""
+    half = taps // 2
+    digits = unpack_trits(packed_row, half + 1)  # (L, M) int8
+    out = []
+    for layer in range(digits.shape[0] - 1, -1, -1):
+        for j in np.nonzero(digits[layer])[0]:
+            out.append((int(layer), int(j), int(digits[layer, j])))
+    return tuple(out)
+
+
+FAST_PATH_MAX = 1  # banks up to this size dispatch to specialized programs
+
+
 def blmac_fir_bank(
     x: jnp.ndarray,  # (C, T) or (T,)
     packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
@@ -281,37 +519,94 @@ def blmac_fir_bank(
     tile: int = 1024,
     bank_tile: int | None = None,
     interpret: bool | None = None,
+    merge: int = MERGE_DEFAULT,
+    schedule: BankSchedule | None = None,
+    fast_path: bool = True,
 ) -> jnp.ndarray:
-    """Apply a B-filter bank to a C-channel signal in ONE `pallas_call`.
+    """Apply a B-filter bank to a C-channel signal with the scheduled
+    bank kernel (one `pallas_call` per occupancy tile group).
 
     Returns int32 (B, C, T - taps + 1).  Bit-exact against
-    `repro.filters.fir_bit_layers_batch` on integer inputs.
+    `repro.filters.fir_bit_layers_batch` on integer inputs, whatever the
+    schedule: grouping permutes filters internally and restores the
+    caller's order on the way out.
+
+    ``fast_path`` routes banks of ≤ `FAST_PATH_MAX` filters to the
+    pulse-specialized kernel — a B=1 "bank" paid 0.70× the per-filter
+    baseline in PR 1 purely in framing/padding overhead; now it costs
+    exactly its pulse count.  Pass a precomputed ``schedule`` (from
+    `plan_bank_schedule`) to skip planning on the hot path — the
+    `FilterBankEngine` does this once at construction.
     """
     x = jnp.asarray(x)
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None, :]
     packed = np.asarray(packed)
-    n_filters, n_layers, n_words = packed.shape
-    if bank_tile is None:
-        bank_tile = default_bank_tile(n_filters)
-    b_pad = _pad_to(n_filters, bank_tile)
-    if b_pad != n_filters:
-        packed = np.concatenate(
-            [packed, np.zeros((b_pad - n_filters, n_layers, n_words), packed.dtype)]
-        )
+    n_filters = packed.shape[0]
+    interpret = resolve_interpret(interpret)
+
+    if fast_path and schedule is None and n_filters <= FAST_PATH_MAX:
+        xi = x.astype(jnp.int32)
+        n_out = xi.shape[-1] - taps + 1
+        ys = [
+            jnp.stack(
+                [
+                    blmac_fir_specialized(
+                        xi[c], pulses_from_packed(packed[b], taps), taps,
+                        tile, interpret,
+                    )
+                    for c in range(xi.shape[0])
+                ]
+            )
+            for b in range(n_filters)
+        ]
+        y = jnp.stack(ys)[:, :, :n_out]
+        return y[:, 0, :] if squeeze else y
+
+    if schedule is None:
+        schedule = plan_bank_schedule(packed, bank_tile, merge)
     frames, n_out = frame_signal_batch(x.astype(jnp.int32), taps, tile)
-    y = _bank_call(
-        frames,
-        jnp.asarray(packed.view(np.int32)),
-        taps,
-        n_layers,
-        tile,
-        bank_tile,
-        resolve_interpret(interpret),
-    )  # (B_pad, C, n_tiles, tile)
-    y = y.reshape(b_pad, y.shape[1], -1)[:n_filters, :, :n_out]
+    y = bank_schedule_apply(frames, schedule, taps, tile, interpret)
+    y = y[:, :, :n_out]
     return y[:, 0, :] if squeeze else y
+
+
+def bank_schedule_apply(
+    frames: jnp.ndarray,  # (C, n_tiles, frame_len) int32 framed signal
+    schedule: BankSchedule,
+    taps: int,
+    tile: int,
+    interpret: bool,
+    device_groups: list | None = None,
+) -> jnp.ndarray:
+    """Run every tile group of a `BankSchedule` over pre-framed signal and
+    reassemble rows in the caller's filter order → (B, C, n_tiles*tile).
+
+    ``device_groups`` optionally supplies pre-uploaded packed operands
+    (one per group, int32 view) so streaming callers don't re-stage the
+    bank every chunk."""
+    n_chan, n_tiles, _ = frames.shape
+    parts = []
+    for gi, g in enumerate(schedule.groups):
+        rows = g.packed.shape[0]
+        if not g.sel_layers:  # all-zero tile group: no kernel at all
+            parts.append(
+                jnp.zeros((rows, n_chan, n_tiles * tile), jnp.int32)
+            )
+            continue
+        op = (
+            device_groups[gi]
+            if device_groups is not None
+            else jnp.asarray(g.packed.view(np.int32))
+        )
+        y = _bank_call(
+            frames, op, taps, g.schedule, g.tail_shift, tile,
+            schedule.tile_size, interpret,
+        )  # (rows, C, n_tiles, tile)
+        parts.append(y.reshape(rows, n_chan, -1))
+    y = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+    return y[schedule.inv]  # drop pad rows, restore caller's filter order
 
 
 def blmac_fir_dynamic(
@@ -322,12 +617,25 @@ def blmac_fir_dynamic(
     tile: int = 1024,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
-    """Single-filter runtime-trit path: a B=1 bank call on packed words.
+    """Single-filter runtime-trit entry point: a B=1 scheduled bank call.
 
-    Kept for API compatibility; `benchmarks/bank_throughput.py` uses it as
-    the per-filter baseline the batched kernel is measured against.
+    The trits stay a runtime operand — the compile cache is keyed on the
+    filter's layer-OCCUPANCY schedule, not its pulse list, so streaming
+    many distinct filters through this path re-traces only when the set
+    of populated layers changes (dense same-width filters share one
+    program).  Use `blmac_fir_bank`'s fast path / `blmac_fir_specialized`
+    when per-filter compilation is acceptable.  Accumulator width: int32,
+    guaranteed by the pack-time `assert_int32_bound` for 16-bit coeffs ×
+    8-bit samples at ≤255 taps (§2.1) — the same single check
+    `FilterBankEngine` relies on.
     """
     trits = np.asarray(trits)
     half = taps // 2
+    w_half = csd_decode(trits[:n_layers, : half + 1].T)  # (M,) int64
+    assert_int32_bound(
+        np.concatenate([w_half, w_half[:-1][::-1]]), 8, "blmac_fir_dynamic"
+    )
     packed = pack_trits(trits[None, :n_layers, : half + 1])  # (1, L, W)
-    return blmac_fir_bank(x, packed, taps, tile, bank_tile=1, interpret=interpret)[0]
+    return blmac_fir_bank(
+        x, packed, taps, tile, bank_tile=1, interpret=interpret, fast_path=False
+    )[0]

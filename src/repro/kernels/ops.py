@@ -70,16 +70,26 @@ def blmac_fir_bank(
     tile: int = 1024,
     bank_tile: int | None = None,
     interpret: bool | None = None,
+    merge: int | None = None,
 ) -> jnp.ndarray:
-    """Apply a whole (B, taps) filter bank to a (C, T) or (T,) signal in
-    ONE `pallas_call` — packed-trit operands, one integer matmul per bit
-    layer, window matrix amortized over the bank tile.
+    """Apply a whole (B, taps) filter bank to a (C, T) or (T,) signal with
+    the sparsity-scheduled bank kernel — packed-trit operands, filters
+    grouped into occupancy-homogeneous bank tiles, one integer matmul per
+    populated *superlayer* (``merge`` adjacent CSD layers; see
+    `repro.kernels.blmac_fir.plan_bank_schedule`), window matrix
+    amortized over the bank tile.  B=1 dispatches to the pulse-
+    specialized fast path.
 
     Returns int32 (B, C, T - taps + 1), or (B, T - taps + 1) for 1-D ``x``.
     """
+    from .blmac_fir import MERGE_DEFAULT
+
     packed = pack_bank_trits(qbank)
     taps = int(np.asarray(qbank).shape[-1])
-    return _bank_kernel(x, packed, taps, tile, bank_tile, interpret)
+    return _bank_kernel(
+        x, packed, taps, tile, bank_tile, interpret,
+        merge=MERGE_DEFAULT if merge is None else merge,
+    )
 
 
 def pulse_matmul_op(

@@ -1,4 +1,4 @@
-"""Backend selection shared by every Pallas kernel in this package.
+"""Backend selection and autotuned dispatch shared by the Pallas kernels.
 
 Kernels take ``interpret: bool | None`` and resolve ``None`` through
 :func:`default_interpret` at trace time: on a TPU backend the
@@ -6,14 +6,51 @@ Kernels take ``interpret: bool | None`` and resolve ``None`` through
 CPU-only) the kernel body runs under the Pallas interpreter, which is the
 bit-exact validation mode the tests rely on.
 
+`autotune_bank_dispatch` is the FIR bank dispatch planner: it sweeps a
+small candidate grid of ``(mode, tile, bank_tile, merge)`` configurations
+through the cost model in `repro.core.costmodel` (constants fitted on the
+reference machine) and returns the winner together with its compiled
+`BankSchedule`.  LRU-cached on a content digest of the packed bank,
+exactly like `specialized_program` caches pulse schedules — re-dispatching
+a bank that was seen before costs a hash plus a dict hit.
+
 Lives in its own leaf module so both ``ops.py`` (the public entry points)
-and the kernel modules it imports can share it without a cycle.
+and the kernel modules it imports can share it without a cycle (the
+planner imports ``blmac_fir`` lazily for the same reason).
 """
 from __future__ import annotations
 
-import jax
+import collections
+import hashlib
 
-__all__ = ["default_interpret", "resolve_interpret"]
+import jax
+import numpy as np
+
+__all__ = [
+    "default_interpret",
+    "resolve_interpret",
+    "autotune_bank_dispatch",
+    "SPECIALIZE_BANK_MAX",
+    "MERGE_CANDIDATES",
+]
+
+# Specialized programs compile once per filter (~0.3 s each under the
+# interpreter): banks wider than this never dispatch per-filter, whatever
+# the steady-state model says, so the compile bill stays bounded.
+SPECIALIZE_BANK_MAX = 32
+MERGE_CANDIDATES = (1, 4, 8)
+DEFAULT_TILE = 512
+# Tile is a measured lookup, not a model output: the analytic cost model
+# is linear in tile and cannot capture the cache-residency cliff that
+# actually decides it (a (bank_tile, tile) int32 accumulator past ~256 KiB
+# goes memory-bound on the reference machine).  Measured optimum: 512
+# everywhere except wide scheduled tiles, where 256 wins ~15%.
+WIDE_BANK_TILE = 128
+
+
+def _default_tile(mode: str, bank_tile: int) -> int:
+    return 256 if mode == "scheduled" and bank_tile >= WIDE_BANK_TILE \
+        else DEFAULT_TILE
 
 
 def default_interpret() -> bool:
@@ -24,3 +61,91 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """Resolve an ``interpret=None`` kernel argument to the backend default."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def autotune_bank_dispatch(
+    packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
+    taps: int,
+    channels: int = 1,
+    tile: int | None = None,
+    chunk_hint: int = 2048,
+    interpret: bool | None = None,
+):
+    """Pick ``(mode, tile, bank_tile, merge)`` for a packed bank.
+
+    Evaluates the cost model over the candidate grid — the specialized
+    per-filter loop (narrow banks only, see `SPECIALIZE_BANK_MAX`) versus
+    occupancy-grouped scheduled tiles at each ``(bank_tile, merge)`` —
+    and returns ``(plan, schedule)``: the winning
+    `repro.core.costmodel.BankDispatchPlan` plus, for scheduled mode, the
+    `BankSchedule` it was costed with (so callers never re-plan).
+
+    ``chunk_hint`` is the expected samples per dispatch, the autotuner's
+    amortization knob (streaming engines push small chunks → dispatch
+    overhead matters more; one-shot batch jobs amortize it).  ``tile``
+    defaults to the measured per-mode lookup (see `_default_tile`).
+    """
+    packed = np.ascontiguousarray(packed)
+    # key on a content digest, not the bytes themselves: hashing reads the
+    # buffer in place (no copy) and the cache retains 32 bytes per bank
+    # instead of pinning whole packed banks for the process lifetime
+    key = (
+        hashlib.sha256(packed).digest(), packed.shape, taps, channels,
+        tile, chunk_hint, resolve_interpret(interpret),
+    )
+    if key in _AUTOTUNE_CACHE:
+        _AUTOTUNE_CACHE.move_to_end(key)
+        return _AUTOTUNE_CACHE[key]
+    result = _autotune(packed, taps, channels, tile, chunk_hint)
+    _AUTOTUNE_CACHE[key] = result
+    while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
+        _AUTOTUNE_CACHE.popitem(last=False)
+    return result
+
+
+_AUTOTUNE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_AUTOTUNE_CACHE_MAX = 16  # schedules hold compacted bank copies: keep few
+
+
+def _autotune(packed, taps, channels, tile, chunk_hint):
+    from ..core.costmodel import (BankDispatchPlan, predict_scheduled_us,
+                                  predict_specialized_us)
+    from ..core.csd import unpack_trits
+    from .blmac_fir import TRITS_PER_WORD, default_bank_tile, plan_bank_schedule
+
+    n_filters, n_layers, n_words = packed.shape
+    m_pad = n_words * TRITS_PER_WORD
+
+    def n_tiles(t):
+        return max(1, -(-chunk_hint // t))
+
+    best = None  # (plan, schedule)
+    if n_filters <= SPECIALIZE_BANK_MAX:
+        trits = unpack_trits(packed, m_pad)  # (B, L, m_pad)
+        mean_pulses = float(np.count_nonzero(trits) / max(n_filters, 1))
+        t = tile or _default_tile("specialized", 1)
+        us = predict_specialized_us(
+            n_filters, channels, n_tiles(t), taps, mean_pulses, n_layers
+        )
+        best = (BankDispatchPlan("specialized", t, 1, 1, us), None)
+    bank_tiles = {default_bank_tile(n_filters)}
+    if n_filters > 8:
+        bank_tiles.add(min(default_bank_tile(n_filters), 32))
+    for bt in sorted(bank_tiles):
+        for merge in MERGE_CANDIDATES:
+            schedule = plan_bank_schedule(packed, bt, merge)
+            groups = [
+                (
+                    g.packed.shape[0] // bt,
+                    bt,
+                    len(g.schedule),
+                    len(g.sel_layers),
+                )
+                for g in schedule.groups
+            ]
+            t = tile or _default_tile("scheduled", bt)
+            us = predict_scheduled_us(channels, n_tiles(t), t, m_pad, groups)
+            plan = BankDispatchPlan("scheduled", t, bt, merge, us)
+            if best is None or us < best[0].predicted_us:
+                best = (plan, schedule)
+    return best

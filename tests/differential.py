@@ -5,7 +5,11 @@ product — proven bit-exact against *each other*, not just individually
 plausible:
 
   1. **oracle**   — `repro.filters.fir_bit_layers_batch` (numpy, Eq. 2),
-  2. **kernel**   — `repro.kernels.blmac_fir_bank` (Pallas, packed trits),
+  2. **kernel**   — `repro.kernels.blmac_fir_bank` (Pallas, packed trits,
+                    sparsity-scheduled bank tiles) — exercised BOTH
+                    through the one-shot wrapper and through the
+                    streaming `FilterBankEngine` scheduled path
+                    (occupancy grouping + order restoration),
   3. **machine**  — `repro.core.FirBlmacMachine` (scalar cycle-accurate
                     reference, per-code Python loop),
   4. **vmachine** — `repro.core.FirBlmacVMachine` (vectorized bank
@@ -20,9 +24,11 @@ fit mask is False).  The scalar machine is slow, so its leg runs on
 everything vectorized covers the whole bank.
 
 Bank sources: `random_type1_bank` (seeded random coefficients — stress the
-digit space) and `sampled_sweep_bank` (real filters from the paper's §3.1
-design sweep).  Used by `tests/test_vmachine.py`; importable from any
-future test or benchmark.
+digit space), `sampled_sweep_bank` (real filters from the paper's §3.1
+design sweep), and `adversarial_bank` (empty-layer / single-pulse /
+truncated rows — the cases a layer-skip schedule can get wrong).  Used by
+`tests/test_vmachine.py` and `tests/test_schedule.py`; importable from
+any future test or benchmark.
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ __all__ = [
     "four_way_check",
     "random_type1_bank",
     "sampled_sweep_bank",
+    "adversarial_bank",
 ]
 
 
@@ -67,6 +74,32 @@ def random_type1_bank(
     if density < 1.0:
         half *= rng.random(half.shape) < density
     return np.concatenate([half, half[:, :-1][:, ::-1]], axis=1)
+
+
+def adversarial_bank(taps: int = 31, coeff_bits: int = 16, seed: int = 0) -> np.ndarray:
+    """The cases a layer-skip schedule can get wrong, in one mixed bank:
+    all-zero rows (empty schedule), single-pulse rows at the extreme
+    layers, low-layer-only rows (sparse occupancy), and dense rows — in
+    an order that forces the occupancy sort to permute and restore."""
+    if taps % 2 == 0:
+        raise ValueError("type-I filters need an odd tap count")
+    rng = np.random.default_rng(seed)
+    half = taps // 2
+    lim = 1 << (coeff_bits - 1)
+    halves = [np.zeros(half + 1, np.int64)]  # all-zero: empty schedule
+    one_top = np.zeros(half + 1, np.int64)
+    one_top[half] = 1 << (coeff_bits - 2)  # single pulse, MSB layer
+    halves.append(one_top)
+    halves.append(rng.integers(-lim, lim, half + 1))  # dense
+    one_bot = np.zeros(half + 1, np.int64)
+    one_bot[0] = 1  # single pulse, layer 0
+    halves.append(one_bot)
+    halves.append(rng.integers(-7, 8, half + 1))  # low layers only
+    halves.append(np.zeros(half + 1, np.int64))  # second empty row
+    halves.append(rng.integers(-lim, lim, half + 1))  # dense again
+    return np.stack(
+        [np.concatenate([h, h[:-1][::-1]]) for h in halves]
+    )
 
 
 def sampled_sweep_bank(
@@ -162,8 +195,16 @@ def four_way_check(
     assert np.array_equal(np.asarray(y, np.int64), oracle), \
         "pallas bank kernel != oracle"
 
-    # -- engine-side cycle prediction agrees with the simulators -------------
-    eng = FilterBankEngine(qbank, channels=1, tile=tile, interpret=interpret)
+    # -- leg 2b: streaming engine through the scheduled bank path ------------
+    # (occupancy sort, tile grouping, layer-skip superlayers, order
+    # restoration — everything the one-shot wrapper also uses, plus the
+    # device-resident operands and the overlap-save framing)
+    eng = FilterBankEngine(
+        qbank, channels=1, tile=tile, mode="packed", interpret=interpret
+    )
+    y_eng = eng.push(x)[:, 0, :]
+    assert np.array_equal(np.asarray(y_eng, np.int64), oracle), \
+        "scheduled FilterBankEngine != oracle"
     assert np.array_equal(eng.predicted_machine_cycles(spec), vres.cycles[:, 0]), \
         "FilterBankEngine cycle prediction != vmachine"
 

@@ -146,10 +146,23 @@ def test_engine_priming_returns_empty():
 
 
 def test_engine_auto_mode_selection():
+    """auto = cost-model dispatch: narrow banks go per-filter specialized,
+    banks past the compile-budget cap always go to the scheduled path."""
+    from repro.kernels.runtime import SPECIALIZE_BANK_MAX
+
     small = FilterBankEngine(_qbank(2, 15))
-    large = FilterBankEngine(_qbank(9, 15))
     assert small.mode == "specialized"
-    assert large.mode == "packed"
+    assert small.dispatch_plan is not None
+    assert small.dispatch_plan.predicted_us > 0
+    wide = FilterBankEngine(_qbank(SPECIALIZE_BANK_MAX + 1, 15))
+    assert wide.mode == "packed"
+    assert wide.dispatch_plan.mode == "scheduled"
+    assert wide.bank_tile == wide.bank_schedule.tile_size
+    # forced modes bypass the autotuner entirely
+    forced = FilterBankEngine(_qbank(2, 15), mode="packed")
+    assert forced.mode == "packed" and forced.dispatch_plan is None
+    alias = FilterBankEngine(_qbank(2, 15), mode="scheduled")
+    assert alias.mode == "packed"
 
 
 def test_engine_reset_and_taps1():
