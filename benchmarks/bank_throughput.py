@@ -57,14 +57,9 @@ BREAKDOWN_PATH = os.path.join(
 
 
 def _design_qbank(n_filters: int, taps: int) -> np.ndarray:
-    from repro.core import po2_quantize_batch
-    from repro.filters import design_bank
+    from repro.filters import spread_lowpass_qbank
 
-    cuts = 0.05 + 0.9 * (np.arange(n_filters) + 0.5) / n_filters
-    q, _ = po2_quantize_batch(
-        design_bank(taps, [("lowpass", float(c)) for c in cuts]), 16
-    )
-    return q
+    return spread_lowpass_qbank(n_filters, taps)
 
 
 def _time(fn, repeats: int) -> float:

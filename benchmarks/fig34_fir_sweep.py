@@ -22,7 +22,6 @@ import pathlib
 import time
 from concurrent.futures import ProcessPoolExecutor
 
-import numpy as np
 
 from repro.core import (
     adds_per_coeff,

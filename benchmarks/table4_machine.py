@@ -38,9 +38,9 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (FirBlmacMachine, FirBlmacVMachine, MachineSpec,
+from repro.core import (FirBlmacMachine, FirBlmacVMachine, MachineSpec,  # noqa: E402
                         po2_quantize_batch)
-from repro.filters import sweep_bank, sweep_specs
+from repro.filters import sweep_bank, sweep_specs  # noqa: E402
 
 PAPER_MEAN_CYCLES = 231.6
 FAST_N_DIV = 20

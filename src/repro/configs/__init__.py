@@ -1,16 +1,15 @@
 """Architecture registry: one module per assigned architecture."""
-from . import (
-    deepseek_coder_33b,
-    deepseek_v3_671b,
-    gemma2_27b,
-    internvl2_76b,
-    mamba2_370m,
-    mixtral_8x22b,
-    musicgen_large,
-    qwen2_5_3b,
-    recurrentgemma_2b,
-    starcoder2_3b,
-)
+# side-effect imports: each module registers its config at import time
+from . import deepseek_coder_33b  # noqa: F401
+from . import deepseek_v3_671b  # noqa: F401
+from . import gemma2_27b  # noqa: F401
+from . import internvl2_76b  # noqa: F401
+from . import mamba2_370m  # noqa: F401
+from . import mixtral_8x22b  # noqa: F401
+from . import musicgen_large  # noqa: F401
+from . import qwen2_5_3b  # noqa: F401
+from . import recurrentgemma_2b  # noqa: F401
+from . import starcoder2_3b  # noqa: F401
 from .base import (
     LONG_CONTEXT_ARCHS,
     SHAPES,

@@ -8,9 +8,7 @@ Every assigned architecture is a `ModelConfig` in its own module; reduced
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any
-
+from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
@@ -161,7 +159,7 @@ def all_configs() -> dict[str, ModelConfig]:
 def cells_for(name: str) -> list[str]:
     """The shape cells this arch runs (40 total across the pool, minus
     documented long_500k skips)."""
-    cfg = get_config(name)
+    get_config(name)  # validate the arch name (raises on unknown)
     cells = ["train_4k", "prefill_32k", "decode_32k"]
     if name in LONG_CONTEXT_ARCHS:
         cells.append("long_500k")

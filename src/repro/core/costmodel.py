@@ -24,8 +24,10 @@ __all__ = [
     "machine_cycles",
     "machine_cycles_batch",
     "BankDispatchPlan",
+    "ShardedBankPlan",
     "predict_specialized_us",
     "predict_scheduled_us",
+    "predict_sharded_us",
 ]
 
 
@@ -154,6 +156,83 @@ def predict_scheduled_us(
         )
         total += PALLAS_CALL_US + n_bank_tiles * channels * n_tiles * step
     return total
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware sharded-bank cost model
+# ---------------------------------------------------------------------------
+#
+# The sharded engine replicates per-shard bank programs over a (bank, data)
+# device mesh the way the paper replicates 110-LUT machines.  Its latency
+# model is CRITICAL-PATH over TWO resources: the slowest shard's device
+# time (shards run concurrently on disjoint devices), and the HOST's
+# total dispatch time (one python thread feeds the whole mesh, so
+# per-shard dispatch work is serial and SUMS across shards — a
+# specialized-mode shard costs one host dispatch per filter, which is
+# why a mesh full of specialized shards is host-bound while the same
+# shards as single-group scheduled programs are not).  Plus the fixed
+# costs sharding adds: one queue hop per shard, and (for time-sharded
+# single-channel streams) one halo ppermute per push.  The same fitted
+# single-device constants feed the per-shard terms, so "does sharding
+# pay at all?" is answered by the SAME model that ranks single-device
+# modes: a narrow bank where dispatch overhead dominates comes back
+# with n_bank_shards == 1 (the autotuner declines).
+
+SHARD_DISPATCH_US = 250.0  # per bank-shard program dispatch, per push
+HALO_EXCHANGE_US = 180.0  # per time-shard halo ppermute, per push
+
+
+@dataclass(frozen=True)
+class ShardedBankPlan:
+    """Mesh-aware autotuner verdict for one bank on one (bank, data) mesh.
+
+    ``n_bank_shards`` of 1 means the autotuner DECLINED to shard the
+    filter axis (single-device program wins).  ``data_mode`` is how the
+    second mesh axis is used: ``"none"`` (axis size 1), ``"channels"``
+    (C divisible over the axis, no communication) or ``"time"`` (signal
+    chunks with an overlap-save halo exchange).  ``shard_plans`` holds
+    one single-device `BankDispatchPlan` per bank shard — per-shard
+    mode/tile picks, exactly what the issue's heterogeneous-occupancy
+    banks need.  ``predicted_us`` is the modelled critical path.
+    """
+
+    n_bank_shards: int
+    n_data: int
+    data_mode: str
+    shard_plans: tuple
+    predicted_us: float
+
+    @property
+    def sharded(self) -> bool:
+        return self.n_bank_shards > 1 or self.n_data > 1
+
+
+def predict_sharded_us(
+    shard_us,
+    n_data: int = 1,
+    data_mode: str = "none",
+    host_us=None,
+) -> float:
+    """Critical-path latency of a sharded dispatch.
+
+    ``shard_us`` are per-shard single-device predictions (each shard's
+    slice of the data axis already folded in by the caller); shards run
+    concurrently, so their DEVICE contribution is the max.  ``host_us``
+    are per-shard host dispatch costs; the host is one serial resource,
+    so they SUM — whichever resource saturates first is the critical
+    path.  Per-shard queue overhead and the time-shard halo exchange
+    are added on top."""
+    shard_us = list(shard_us)
+    if not shard_us:
+        raise ValueError("predict_sharded_us needs at least one shard")
+    n_shards = len(shard_us)
+    us = max(shard_us)
+    if host_us is not None:
+        us = max(us, float(sum(host_us)))
+    us += n_shards * SHARD_DISPATCH_US
+    if data_mode == "time" and n_data > 1:
+        us += HALO_EXCHANGE_US * n_data
+    return us
 
 
 def machine_cycles_batch(

@@ -1,6 +1,37 @@
-from .sharding import (batch_shardings, data_axes, data_size, make_rules,
-                       tree_shardings)
-from .collectives import compressed_psum, compressed_psum_tree
+from .collectives import (
+    compressed_psum,
+    compressed_psum_tree,
+    get_shard_map,
+    halo_exchange_left,
+    shard_map_no_check_kwargs,
+)
+from .sharding import (
+    BankPartition,
+    bank_filter_costs,
+    bank_mesh,
+    batch_shardings,
+    data_axes,
+    data_size,
+    make_rules,
+    mesh_bank_shape,
+    partition_bank,
+    tree_shardings,
+)
 
-__all__ = ["batch_shardings", "data_axes", "data_size", "make_rules",
-           "tree_shardings", "compressed_psum", "compressed_psum_tree"]
+__all__ = [
+    "BankPartition",
+    "bank_filter_costs",
+    "bank_mesh",
+    "batch_shardings",
+    "compressed_psum",
+    "compressed_psum_tree",
+    "data_axes",
+    "data_size",
+    "get_shard_map",
+    "halo_exchange_left",
+    "make_rules",
+    "mesh_bank_shape",
+    "partition_bank",
+    "shard_map_no_check_kwargs",
+    "tree_shardings",
+]

@@ -1,4 +1,5 @@
-"""Distributed-optimization tricks: int8-compressed gradient all-reduce.
+"""Distributed collectives: int8-compressed gradient all-reduce and the
+overlap-save halo exchange for time-sharded FIR streams.
 
 Standard pjit training lets XLA place the data-parallel grad reductions.
 For bandwidth-constrained inter-pod links, `compressed_psum_tree` offers an
@@ -7,15 +8,65 @@ psum → dequantize.  Error is unbiased-ish (stochastic rounding optional)
 and bounded by scale/254; `tests/test_collectives.py` checks numerics and
 `train_step(..., grad_compression="int8")` wires it into the loop for the
 pure-DP case.
+
+`halo_exchange_left` is the FIR serving collective: when a signal chunk is
+split along time over a mesh axis, every shard needs the last ``taps − 1``
+samples of its LEFT neighbour to compute its own first outputs (classical
+overlap-save, but across devices instead of across pushes).  One
+`ppermute` moves exactly the halo — no all-gather of the stream.
 """
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+
+def get_shard_map():
+    """`shard_map` across jax versions (>=0.5 top level, 0.4.x experimental)."""
+    try:
+        from jax import shard_map
+    except ImportError:
+        from jax.experimental.shard_map import shard_map
+    return shard_map
+
+
+def shard_map_no_check_kwargs() -> dict:
+    """The "skip replication check" kwarg for this jax's `shard_map`
+    (renamed check_rep → check_vma); keyed off the actual signature."""
+    params = inspect.signature(get_shard_map()).parameters
+    if "check_vma" in params:
+        return {"check_vma": False}
+    if "check_rep" in params:
+        return {"check_rep": False}
+    return {}
+
+
+def halo_exchange_left(
+    x: jax.Array, axis_name: Any, axis_size: int, halo: int
+) -> jax.Array:
+    """Inside shard_map: prepend the last ``halo`` samples of the LEFT
+    neighbour's time slice to this shard's ``(..., T_local)`` slice.
+
+    Shard 0 has no left neighbour and receives zeros (ppermute's
+    out-of-range default) — its first ``halo`` outputs are the invalid
+    warm-up region the caller trims, exactly like the zero-primed tail
+    of a fresh overlap-save stream.  ``axis_size`` must be the static
+    mesh-axis size (the permutation is built at trace time).
+    """
+    if halo <= 0:
+        return x
+    if x.shape[-1] < halo:
+        raise ValueError(
+            f"halo {halo} exceeds the local slice ({x.shape[-1]} samples)"
+        )
+    perm = [(i, i + 1) for i in range(axis_size - 1)]
+    left = jax.lax.ppermute(x[..., -halo:], axis_name, perm=perm)
+    return jnp.concatenate([left, x], axis=-1)
 
 
 def _quantize_int8(x: jax.Array, key: jax.Array | None = None):
@@ -62,20 +113,8 @@ def make_compressed_dp_grad_fn(loss_fn, mesh: Mesh, axis: str = "data"):
     Params replicated; batch sharded on `axis`.  Returns a function
     (params, batch) → (loss, grads) with grads reduced in int8.
     """
-    try:  # jax >= 0.5 re-exports shard_map at the top level
-        from jax import shard_map
-    except ImportError:  # jax 0.4.x: experimental namespace
-        from jax.experimental.shard_map import shard_map
-    # the "skip replication check" kwarg was renamed check_rep → check_vma;
-    # key off the actual signature, not the import location
-    import inspect
-
-    params = inspect.signature(shard_map).parameters
-    _no_check = (
-        {"check_vma": False} if "check_vma" in params
-        else {"check_rep": False} if "check_rep" in params
-        else {}
-    )
+    shard_map = get_shard_map()
+    _no_check = shard_map_no_check_kwargs()
 
     def local_grads(params, batch):
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)

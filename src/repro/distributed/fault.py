@@ -13,8 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
-
 import jax
 import numpy as np
 

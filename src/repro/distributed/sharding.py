@@ -9,13 +9,24 @@ Parallelism map (DESIGN.md §5):
   EP    experts over model
   SP    decode KV/latent caches over model (flash-decoding style), and
         over (data, model) when the decode batch cannot fill the data axis
+
+FIR bank partitioning (the BLMAC serving side):
+  BANK  filters over the `bank` mesh axis — `partition_bank` assigns
+        filters to shards occupancy-sorted AND cost-balanced, so one
+        dense shard does not straggle the mesh (the paper scales by
+        replicating 110-LUT machines; we scale by replicating per-shard
+        bank programs)
+  DATA  channels (or, for single-channel streams, signal time chunks
+        with an overlap-save halo exchange) over the `data` mesh axis
 """
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
@@ -146,3 +157,144 @@ def batch_shardings(mesh: Mesh, rules: dict, batch_tree) -> Any:
         ),
         batch_tree,
     )
+
+
+# ---------------------------------------------------------------------------
+# FIR filter-bank partition specs (the BLMAC serving mesh)
+# ---------------------------------------------------------------------------
+
+BANK_AXIS = "bank"
+DATA_AXIS = "data"
+
+
+def bank_mesh(
+    n_bank: int | None = None,
+    n_data: int = 1,
+    devices=None,
+) -> Mesh:
+    """(bank, data) device mesh for sharded filter-bank serving.
+
+    ``n_bank`` defaults to every available device divided by ``n_data``.
+    A 1×1 mesh is valid — `ShardedFilterBankEngine` degrades to the
+    single-device scheduled path on it.
+    """
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if n_bank is None:
+        n_bank = max(1, len(devices) // n_data)
+    need = n_bank * n_data
+    if need > len(devices):
+        raise ValueError(
+            f"bank_mesh needs {need} devices ({n_bank}×{n_data}), "
+            f"have {len(devices)}"
+        )
+    return jax.make_mesh(
+        (n_bank, n_data), (BANK_AXIS, DATA_AXIS), devices=devices[:need]
+    )
+
+
+def mesh_bank_shape(mesh: Mesh) -> tuple[int, int]:
+    """(n_bank, n_data) of a bank mesh; axes it lacks count as size 1."""
+    return (
+        mesh.shape.get(BANK_AXIS, 1),
+        mesh.shape.get(DATA_AXIS, 1),
+    )
+
+
+@dataclass(frozen=True)
+class BankPartition:
+    """Filter → bank-shard assignment with caller-order restoration baked in.
+
+    ``assign[s]`` holds the ORIGINAL indices of the filters served by
+    shard ``s`` (occupancy-sorted within the shard, so each shard's
+    `plan_bank_schedule` sees a homogeneous run).  ``inv`` maps an
+    original filter index to its row in the shard-major concatenation of
+    per-shard outputs — reassembly is one host-side index permutation,
+    never a cross-device gather.  ``cost[s]`` is the predicted per-shard
+    work the balancer equalized.
+    """
+
+    assign: tuple
+    inv: np.ndarray
+    cost: np.ndarray
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.assign)
+
+    @property
+    def imbalance(self) -> float:
+        """max/mean per-shard predicted cost — 1.0 is a perfect balance."""
+        mean = float(self.cost.mean())
+        return float(self.cost.max()) / mean if mean > 0 else 1.0
+
+
+def bank_filter_costs(packed: np.ndarray, taps: int) -> np.ndarray:
+    """(B,) predicted per-filter work: BLMAC pulses + the symmetric folds.
+
+    The pulse count is exactly the paper's §3.3 add count, read straight
+    off the packed trit words (each populated 2-bit code is one add in
+    every kernel mode), so the balancer and the cost model agree on what
+    "one filter's work" means.
+    """
+    from ..kernels.blmac_fir import TRITS_PER_WORD
+
+    packed = np.asarray(packed)
+    codes = (
+        packed[..., None]
+        >> (2 * np.arange(TRITS_PER_WORD, dtype=np.uint32))
+    ) & np.uint32(3)
+    pulses = (codes != 0).sum(axis=(1, 2, 3))
+    return pulses.astype(np.float64) + taps // 2
+
+
+def partition_bank(
+    packed: np.ndarray,
+    n_shards: int,
+    taps: int,
+    cost: np.ndarray | None = None,
+) -> BankPartition:
+    """Occupancy-balanced contiguous partition of a packed bank.
+
+    Filters are first sorted by layer-occupancy signature (the same
+    ordering `plan_bank_schedule` uses), then the sorted run is cut into
+    ``n_shards`` CONTIGUOUS spans with balanced cumulative cost.
+    Contiguity in signature order keeps every shard occupancy-
+    homogeneous (its tile schedules stay short); the weighted cut keeps
+    a dense shard from straggling the mesh.  Shards may carry unequal
+    filter counts — per-shard programs are compiled per shard, so no
+    SPMD padding is needed.  ``n_shards`` is clamped to the bank size.
+    """
+    from ..core.csd import occupancy_signatures
+
+    packed = np.asarray(packed)
+    n_filters = packed.shape[0]
+    if n_filters == 0:
+        raise ValueError("cannot partition an empty bank")
+    n_shards = max(1, min(int(n_shards), n_filters))
+    if cost is None:
+        cost = bank_filter_costs(packed, taps)
+    cost = np.asarray(cost, np.float64)
+    sig = occupancy_signatures(packed.any(axis=-1))
+    order = np.argsort(sig, kind="stable")
+    csum = np.cumsum(cost[order])
+    total = csum[-1]
+    if total <= 0:  # all-zero bank: fall back to equal counts
+        bounds = [round(n_filters * s / n_shards) for s in range(n_shards + 1)]
+    else:
+        bounds = [0]
+        for s in range(1, n_shards):
+            target = total * s / n_shards
+            cut = int(np.searchsorted(csum, target))
+            # every shard keeps >= 1 filter and cuts stay monotonic
+            cut = min(max(cut, bounds[-1] + 1), n_filters - (n_shards - s))
+            bounds.append(cut)
+        bounds.append(n_filters)
+    assign = tuple(
+        order[bounds[s]: bounds[s + 1]] for s in range(n_shards)
+    )
+    inv = np.empty(n_filters, np.int64)
+    inv[np.concatenate(assign)] = np.arange(n_filters)
+    shard_cost = np.array([cost[a].sum() for a in assign])
+    return BankPartition(assign=assign, inv=inv, cost=shard_cost)

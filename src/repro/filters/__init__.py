@@ -4,11 +4,14 @@ streaming overlap-save filter-bank engine."""
 from .apply import (fir_bit_layers, fir_bit_layers_batch, fir_direct,
                     fir_symmetric, sliding_windows)
 from .bank import SPECIALIZE_THRESHOLD, FilterBankEngine
-from .fir import FilterKind, bands_for, design_bank, firwin_batch, window_values
+from .fir import (FilterKind, bands_for, design_bank, firwin_batch,
+                  spread_lowpass_qbank, window_values)
+from .sharded import ShardedFilterBankEngine
 from .sweep import TAPS_RANGE, SweepSpec, iter_sweep, sweep_bank, sweep_specs
 
 __all__ = [
     "FilterBankEngine",
+    "ShardedFilterBankEngine",
     "SPECIALIZE_THRESHOLD",
     "fir_bit_layers",
     "fir_bit_layers_batch",
@@ -19,6 +22,7 @@ __all__ = [
     "bands_for",
     "design_bank",
     "firwin_batch",
+    "spread_lowpass_qbank",
     "window_values",
     "TAPS_RANGE",
     "SweepSpec",

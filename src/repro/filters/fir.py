@@ -18,7 +18,8 @@ import numpy as np
 
 FilterKind = Literal["lowpass", "highpass", "bandpass", "bandstop"]
 
-__all__ = ["FilterKind", "bands_for", "window_values", "firwin_batch", "design_bank"]
+__all__ = ["FilterKind", "bands_for", "window_values", "firwin_batch",
+           "design_bank", "spread_lowpass_qbank"]
 
 
 def bands_for(kind: FilterKind, cutoff: float | tuple[float, float]) -> np.ndarray:
@@ -127,3 +128,19 @@ def design_bank(
 ) -> np.ndarray:
     """Convenience: design a heterogeneous bank from (kind, cutoff) specs."""
     return firwin_batch(numtaps, [bands_for(k, c) for k, c in specs], window)
+
+
+def spread_lowpass_qbank(
+    n_filters: int, taps: int, coeff_bits: int = 16
+) -> np.ndarray:
+    """Quantized lowpass bank with evenly spread cutoffs in (0.05, 0.95) —
+    the shared demo/benchmark workload (BENCH_fir.json, BENCH_sharded.json,
+    the --fir-bank serving demo, and the sharded tests all use this one
+    construction so their banks cannot silently diverge)."""
+    from ..core.quantize import po2_quantize_batch
+
+    cuts = 0.05 + 0.9 * (np.arange(n_filters) + 0.5) / n_filters
+    q, _ = po2_quantize_batch(
+        design_bank(taps, [("lowpass", float(c)) for c in cuts]), coeff_bits
+    )
+    return q

@@ -1,0 +1,425 @@
+"""Device-sharded filter-bank serving: BLMAC banks over a (bank, data) mesh.
+
+The paper scales throughput by replicating 110-LUT BLMAC machines; this
+module scales the jax_pallas reproduction the same way across XLA devices.
+`ShardedFilterBankEngine` partitions a (B filters × C channels) bank over
+a two-axis device mesh:
+
+  * **bank axis** — filters, assigned by
+    `repro.distributed.sharding.partition_bank`: occupancy-sorted so each
+    shard's `plan_bank_schedule` sees a homogeneous run (short superlayer
+    programs), cost-balanced so one dense shard never straggles the mesh.
+    Every shard compiles its OWN schedule and runs as its own program on
+    its own mesh row — replicated machines, not one padded SPMD body.
+  * **data axis** — channels when ``C`` divides the axis (no
+    communication), otherwise signal time chunks with an overlap-save
+    halo exchange (`repro.distributed.collectives.halo_exchange_left`,
+    one `ppermute` of ``taps − 1`` samples per push) inside `shard_map`.
+
+Whether sharding pays at all is the mesh-aware autotuner's call
+(`repro.kernels.runtime.autotune_sharded_dispatch`): the unsharded plan
+competes in the same critical-path sweep, and a narrow bank or a short
+chunk comes back with ``n_bank_shards == 1`` — the engine then degrades
+to the single-device scheduled path bit-for-bit.
+
+Output reassembly is gather-free: per-shard outputs land on their own
+devices, the host reads each shard's block, and ONE precomputed index
+permutation (`BankPartition.inv`) restores the caller's filter order —
+no cross-device collective touches the results.
+
+Bit-exactness: every mesh shape agrees with
+`repro.filters.fir_bit_layers_batch` to the last bit on integer inputs
+(the fifth leg of `tests/differential.py`).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.csd import require_type1
+from ..distributed.collectives import (get_shard_map, halo_exchange_left,
+                                       shard_map_no_check_kwargs)
+from ..distributed.sharding import DATA_AXIS, bank_mesh, mesh_bank_shape
+
+__all__ = ["ShardedFilterBankEngine", "PendingChunk"]
+
+
+class PendingChunk:
+    """In-flight outputs of one `push_async`: per-shard device arrays plus
+    the reassembly recipe.  `result()` materializes on the host — each
+    shard's block is read off its own devices and rows are restored to
+    caller order with one index permutation (no device-side gather)."""
+
+    def __init__(self, shard_outs, inv, n_out, offsets, n_filters, channels):
+        self._shard_outs = shard_outs
+        self._inv = inv
+        self._offsets = offsets
+        self.n_out = int(n_out)
+        self._shape = (n_filters, channels)
+        self._resolved = None
+
+    def result(self) -> np.ndarray:
+        """Block until the chunk's outputs are ready → int32 (B, C, n_out)."""
+        if self._resolved is not None:
+            return self._resolved
+        b, c = self._shape
+        if self.n_out <= 0:
+            self._resolved = np.zeros((b, c, 0), np.int32)
+            return self._resolved
+        parts = []
+        for y, off in zip(self._shard_outs, self._offsets):
+            if isinstance(y, list):  # specialized shard: per-filter arrays
+                rows = [
+                    np.stack([np.asarray(a)[: self.n_out] for a in chans])
+                    for chans in y
+                ]
+                parts.append(np.stack(rows))
+            else:
+                parts.append(np.asarray(y)[:, :, off: off + self.n_out])
+        out = np.concatenate(parts, axis=0)[self._inv]
+        self._shard_outs = None  # free device references
+        self._resolved = np.ascontiguousarray(out)
+        return self._resolved
+
+
+class ShardedFilterBankEngine:
+    """Overlap-save streaming FIR bank sharded over a (bank, data) mesh.
+
+    Parameters
+    ----------
+    qbank : (B, taps) or (taps,) int array
+        Quantized odd symmetric (type-I) coefficients, one row per filter.
+    channels : int
+        Independent input channels C (all filtered by every filter).
+    mesh : jax.sharding.Mesh | None
+        A mesh with a ``bank`` axis and optionally a ``data`` axis
+        (see `repro.distributed.sharding.bank_mesh`).  ``None`` builds a
+        (n_devices, 1) mesh over every visible device.  A 1×1 mesh is
+        valid and degrades to the single-device scheduled engine.
+    n_bank_shards : int | None
+        Force the filter-shard count (clamped to the mesh's bank axis);
+        ``None`` lets the mesh-aware autotuner pick — including picking
+        1 when sharding does not pay.
+    data_mode : {"none", "channels", "time"} | None
+        Force how the data axis is used; ``None`` lets the autotuner
+        pick — including leaving the axis idle when the halo/split
+        overhead loses to a single device per shard.
+    tile, merge, chunk_hint, interpret
+        As `repro.filters.FilterBankEngine`; per-shard tiles/modes are
+        autotuned per shard unless ``tile`` pins them.
+    """
+
+    def __init__(
+        self,
+        qbank: np.ndarray,
+        channels: int = 1,
+        mesh: Mesh | None = None,
+        n_bank_shards: int | None = None,
+        data_mode: str | None = None,
+        tile: int | None = None,
+        merge: int | None = None,
+        chunk_hint: int = 2048,
+        interpret: bool | None = None,
+    ):
+        from ..kernels.blmac_fir import pack_bank_trits, plan_bank_schedule
+        from ..kernels.runtime import (autotune_sharded_dispatch,
+                                       resolve_interpret)
+
+        qbank = np.atleast_2d(np.asarray(qbank, np.int64))
+        if qbank.ndim != 2:
+            raise ValueError("qbank must be (n_filters, taps)")
+        taps = require_type1(qbank, "ShardedFilterBankEngine")
+        if channels < 1:
+            raise ValueError("channels must be >= 1")
+        if mesh is None:
+            mesh = bank_mesh()
+        self.mesh = mesh
+        self.qbank = qbank
+        self.n_filters = int(qbank.shape[0])
+        self.taps = int(taps)
+        self.channels = int(channels)
+        self.interpret = resolve_interpret(interpret)
+        n_bank, n_data = mesh_bank_shape(mesh)
+        if n_bank * n_data != mesh.size:
+            raise ValueError(
+                f"mesh must be ({'bank'}, {'data'})-shaped, got {mesh.shape}"
+            )
+        # int32 bound (§2.1) asserted once, in here
+        packed = pack_bank_trits(qbank)
+        force = None
+        if n_bank_shards is not None:
+            force = max(1, min(int(n_bank_shards), n_bank, self.n_filters))
+        self.plan, self.partition, schedules = autotune_sharded_dispatch(
+            packed, self.taps, self.channels, (n_bank, n_data),
+            tile=tile, chunk_hint=chunk_hint, interpret=interpret,
+            force_shards=force, force_data=data_mode,
+        )
+        if merge is not None:
+            # re-plan only the scheduled shards whose merge differs,
+            # KEEPING each shard's autotuned bank tile, and stamp the
+            # override into the shard plans; predicted_us intentionally
+            # keeps the autotuner's estimate for ITS schedules — the
+            # cost model is not re-run for a hand-forced merge
+            import dataclasses
+
+            schedules = tuple(
+                plan_bank_schedule(
+                    np.ascontiguousarray(packed[rows]), sched.tile_size, merge
+                )
+                if sched is not None and sched.merge != merge else sched
+                for rows, sched in zip(self.partition.assign, schedules)
+            )
+            self.plan = dataclasses.replace(
+                self.plan,
+                shard_plans=tuple(
+                    dataclasses.replace(p, merge=merge)
+                    if p.mode == "scheduled" else p
+                    for p in self.plan.shard_plans
+                ),
+            )
+        self.n_bank_shards = self.plan.n_bank_shards
+        self.n_data = self.plan.n_data
+        self.data_mode = self.plan.data_mode
+        self._halo = self.taps - 1
+        # chunk lengths are quantized to a multiple of every shard's tile
+        # so ragged pushes hit a handful of jit-cache entries; only TIME
+        # sharding additionally needs the ×n_data factor (each device's
+        # slice must itself be tile-aligned and cover the halo it sends
+        # rightwards) — channel sharding splits C, not time
+        self._quantum = max(p.tile for p in self.plan.shard_plans)
+        if self.data_mode == "time":
+            self._quantum *= self.n_data
+            while self._quantum // self.n_data < self._halo:
+                self._quantum *= 2
+
+        devices = np.asarray(mesh.devices).reshape(n_bank, n_data)
+        self._shards = []
+        for s, (rows, plan) in enumerate(
+            zip(self.partition.assign, self.plan.shard_plans)
+        ):
+            self._shards.append(
+                self._build_shard(
+                    np.ascontiguousarray(packed[rows]), plan,
+                    schedules[s], devices[s % n_bank],
+                )
+            )
+        # overlap-save state: the last taps-1 samples of every channel
+        self._tail = np.zeros((channels, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+
+    # -- construction helpers ----------------------------------------------
+
+    def _build_shard(self, packed_s, plan, schedule, dev_row):
+        """One bank shard = (dispatch closure, device row).  Returns a
+        callable ``fn(buf_np, n) -> device output`` where ``buf_np`` is
+        the padded (C, n_pad) int32 buffer and ``n`` the valid length."""
+        from ..kernels.blmac_fir import pulses_from_packed
+
+        if plan.mode == "specialized":  # n_data == 1 by construction
+            pulses = [
+                pulses_from_packed(packed_s[b], self.taps)
+                for b in range(packed_s.shape[0])
+            ]
+            dev = dev_row[0]
+
+            def run_specialized(buf, n):
+                from ..kernels.blmac_fir import blmac_fir_specialized
+
+                x = jax.device_put(jnp.asarray(buf, jnp.int32), dev)
+                chans = [x[c] for c in range(self.channels)]
+                return [
+                    [
+                        blmac_fir_specialized(
+                            xc, p, self.taps, plan.tile, self.interpret
+                        )
+                        for xc in chans
+                    ]
+                    for p in pulses
+                ]
+
+            return run_specialized, 0
+
+        fn = self._make_scheduled_fn(schedule, plan.tile)
+        if self.n_data == 1:
+            dev = dev_row[0]
+            ops = tuple(
+                jax.device_put(jnp.asarray(g.packed.view(np.int32)), dev)
+                for g in schedule.groups if g.sel_layers
+            )
+
+            def run_single(buf, n):
+                x = jax.device_put(jnp.asarray(buf, jnp.int32), dev)
+                return fn(x, *ops)
+
+            return run_single, 0
+
+        row_mesh = Mesh(dev_row, (DATA_AXIS,))
+        repl = NamedSharding(row_mesh, P())
+        ops = tuple(
+            jax.device_put(jnp.asarray(g.packed.view(np.int32)), repl)
+            for g in schedule.groups if g.sel_layers
+        )
+        shard_map = get_shard_map()
+        nc = shard_map_no_check_kwargs()
+        if self.data_mode == "channels":
+            in_specs = (P(DATA_AXIS, None),) + (P(),) * len(ops)
+            out_specs = P(None, DATA_AXIS, None)
+
+            def body(buf, *op):
+                return fn(buf, *op)
+
+            offset = 0
+        else:  # time: halo exchange, then each slice is self-contained
+            in_specs = (P(None, DATA_AXIS),) + (P(),) * len(ops)
+            out_specs = P(None, None, DATA_AXIS)
+            n_data, halo = self.n_data, self._halo
+
+            def body(buf, *op):
+                chunk_local = buf.shape[-1]
+                xl = halo_exchange_left(buf, DATA_AXIS, n_data, halo)
+                return fn(xl, *op)[:, :, :chunk_local]
+
+            # shard 0's halo is ppermute zero-fill: the first taps-1
+            # concatenated outputs are warm-up, trimmed at reassembly
+            offset = self._halo
+
+        mapped = shard_map(
+            body, mesh=row_mesh, in_specs=in_specs, out_specs=out_specs, **nc
+        )
+        jitted = jax.jit(mapped)
+        x_sharding = NamedSharding(row_mesh, in_specs[0])
+
+        def run_mapped(buf, n):
+            x = jax.device_put(jnp.asarray(buf, jnp.int32), x_sharding)
+            return jitted(x, *ops)
+
+        return run_mapped, offset
+
+    def _make_scheduled_fn(self, schedule, tile):
+        """Jitted scheduled-bank program for one shard: frame, then the
+        shared `bank_schedule_apply` group loop (zeros for empty groups,
+        one `_bank_call` per tile group, shard-order restoration).  The
+        schedule is static (closed over); jit caches per input shape ×
+        device.  ``ops`` carries only the NON-empty groups' operands
+        (shard_map in_specs must match real arrays), re-slotted to the
+        full per-group list here."""
+        from ..kernels.blmac_fir import bank_schedule_apply, frame_signal_batch
+
+        taps, interpret = self.taps, self.interpret
+        has_layers = [bool(g.sel_layers) for g in schedule.groups]
+
+        @jax.jit
+        def fn(x, *ops):
+            frames, _ = frame_signal_batch(x, taps, tile)
+            it = iter(ops)
+            full = [next(it) if h else None for h in has_layers]
+            return bank_schedule_apply(
+                frames, schedule, taps, tile, interpret, device_groups=full
+            )
+
+        return fn
+
+    # -- streaming API ------------------------------------------------------
+
+    def push_async(self, chunk) -> PendingChunk:
+        """Feed (C, n) samples (or (n,) when C == 1); dispatches every
+        bank shard onto its mesh row and returns WITHOUT blocking on the
+        device work — the double-buffered serving path overlaps the next
+        chunk's host framing with this chunk's kernels."""
+        chunk = np.asarray(chunk)
+        if chunk.ndim == 1:
+            chunk = chunk[None, :]
+        if chunk.shape[0] != self.channels:
+            raise ValueError(
+                f"expected {self.channels} channels, got {chunk.shape[0]}"
+            )
+        self.samples_in += chunk.shape[1]
+        buf = np.concatenate([self._tail, chunk.astype(np.int32)], axis=1)
+        n = buf.shape[1]
+        if n < self.taps:  # still priming
+            self._tail = buf
+            return PendingChunk(
+                [], self.partition.inv, 0, [], self.n_filters, self.channels
+            )
+        self._tail = (
+            buf[:, n - self._halo:] if self._halo else buf[:, :0]
+        )
+        n_out = n - self.taps + 1
+        n_pad = -(-n // self._quantum) * self._quantum
+        if n_pad != n:
+            buf = np.pad(buf, ((0, 0), (0, n_pad - n)))
+        outs, offsets = [], []
+        for fn, offset in self._shards:
+            outs.append(fn(buf, n))
+            offsets.append(offset)
+        self.samples_out += n_out
+        return PendingChunk(
+            outs, self.partition.inv, n_out, offsets,
+            self.n_filters, self.channels,
+        )
+
+    def push(self, chunk) -> np.ndarray:
+        """Synchronous `push_async` → int32 (B, C, n_out)."""
+        return self.push_async(chunk).result()
+
+    def __call__(self, chunk) -> np.ndarray:
+        return self.push(chunk)
+
+    def reset(self) -> None:
+        """Drop all buffered history (start a new stream)."""
+        self._tail = np.zeros((self.channels, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+
+    @property
+    def pending(self) -> int:
+        """Samples buffered but not yet old enough to finish a window."""
+        return self._tail.shape[1]
+
+    def time_shards(self, chunk, repeats: int = 3) -> np.ndarray:
+        """(n_shards,) best-of-``repeats`` isolated wall seconds per bank
+        shard for one ``chunk``, without disturbing the stream state.
+
+        Forced host-platform devices share the host's cores, so timing
+        shards CONCURRENTLY measures core contention, not mesh scaling;
+        this probe times each shard's dispatch alone (dispatch → block),
+        which is the per-machine number the paper's replicated-instance
+        throughput model aggregates.  `benchmarks/bank_sharded.py` builds
+        its critical-path scaling row from exactly this.
+        """
+        import time
+
+        chunk = np.atleast_2d(np.asarray(chunk)).astype(np.int32)
+        n = chunk.shape[1]
+        if n < self.taps:
+            raise ValueError("chunk shorter than the filter")
+        n_pad = -(-n // self._quantum) * self._quantum
+        buf = np.pad(chunk, ((0, 0), (0, n_pad - n)))
+        for fn, _ in self._shards:  # warm-up: compile
+            jax.block_until_ready(fn(buf, n))
+        # round-robin the repeats so one transient host hiccup cannot
+        # poison every sample of a single shard (min-per-shard is only
+        # robust when a shard's samples are spread over the run)
+        times = np.full(len(self._shards), np.inf)
+        for _ in range(repeats):
+            for s, (fn, _) in enumerate(self._shards):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(buf, n))
+                times[s] = min(times[s], time.perf_counter() - t0)
+        return times
+
+    # -- introspection ------------------------------------------------------
+
+    def describe(self) -> str:
+        """One line for logs: mesh, shard modes, balance, predicted cost."""
+        modes = ",".join(p.mode[:4] for p in self.plan.shard_plans)
+        return (
+            f"sharded-bank B={self.n_filters} C={self.channels} "
+            f"mesh=({self.n_bank_shards}x{self.n_data}) "
+            f"data={self.data_mode} modes=[{modes}] "
+            f"imbalance={self.partition.imbalance:.2f} "
+            f"predicted={self.plan.predicted_us:.0f}us"
+        )

@@ -364,15 +364,15 @@ def superlayer_schedule(
     """
     if merge < 1:
         raise ValueError("merge must be >= 1")
-    layers = sorted((int(l) for l in populated), reverse=True)
+    layers = sorted((int(lyr) for lyr in populated), reverse=True)
     if not layers:
         return (), 0, ()
     runs: list[list[int]] = [[layers[0]]]
-    for l in layers[1:]:
-        if runs[-1][0] - l < merge:  # span (hi − lo) stays < merge
-            runs[-1].append(l)
+    for lyr in layers[1:]:
+        if runs[-1][0] - lyr < merge:  # span (hi − lo) stays < merge
+            runs[-1].append(lyr)
         else:
-            runs.append([l])
+            runs.append([lyr])
     schedule = []
     sel_layers: list[int] = []
     prev_lo = None
@@ -380,7 +380,7 @@ def superlayer_schedule(
         lo = run[-1]
         shift_in = 0 if prev_lo is None else prev_lo - lo
         parts = tuple(
-            (len(sel_layers) + i, l - lo) for i, l in enumerate(run)
+            (len(sel_layers) + i, lyr - lo) for i, lyr in enumerate(run)
         )
         sel_layers.extend(run)
         schedule.append((shift_in, parts))

@@ -30,6 +30,7 @@ __all__ = [
     "default_interpret",
     "resolve_interpret",
     "autotune_bank_dispatch",
+    "autotune_sharded_dispatch",
     "SPECIALIZE_BANK_MAX",
     "MERGE_CANDIDATES",
 ]
@@ -107,7 +108,8 @@ _AUTOTUNE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _AUTOTUNE_CACHE_MAX = 16  # schedules hold compacted bank copies: keep few
 
 
-def _autotune(packed, taps, channels, tile, chunk_hint):
+def _autotune(packed, taps, channels, tile, chunk_hint,
+              allow_specialized=True):
     from ..core.costmodel import (BankDispatchPlan, predict_scheduled_us,
                                   predict_specialized_us)
     from ..core.csd import unpack_trits
@@ -120,7 +122,7 @@ def _autotune(packed, taps, channels, tile, chunk_hint):
         return max(1, -(-chunk_hint // t))
 
     best = None  # (plan, schedule)
-    if n_filters <= SPECIALIZE_BANK_MAX:
+    if allow_specialized and n_filters <= SPECIALIZE_BANK_MAX:
         trits = unpack_trits(packed, m_pad)  # (B, L, m_pad)
         mean_pulses = float(np.count_nonzero(trits) / max(n_filters, 1))
         t = tile or _default_tile("specialized", 1)
@@ -148,4 +150,161 @@ def _autotune(packed, taps, channels, tile, chunk_hint):
             plan = BankDispatchPlan("scheduled", t, bt, merge, us)
             if best is None or us < best[0].predicted_us:
                 best = (plan, schedule)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware sharded dispatch planning
+# ---------------------------------------------------------------------------
+
+
+def autotune_sharded_dispatch(
+    packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
+    taps: int,
+    channels: int = 1,
+    mesh_shape: "tuple[int, int]" = (1, 1),
+    tile: int | None = None,
+    chunk_hint: int = 2048,
+    interpret: bool | None = None,
+    force_shards: int | None = None,
+    force_data: str | None = None,
+):
+    """Plan a bank dispatch over an (n_bank, n_data) device mesh.
+
+    Sweeps the bank-shard count over {1, 2, 4, …, n_bank} (occupancy-
+    balanced contiguous partitions from
+    `repro.distributed.sharding.partition_bank`), runs the single-device
+    autotuner on EVERY candidate shard (per-shard mode/tile/merge picks,
+    with the data-axis slice of the chunk folded into its amortization
+    knob), and scores candidates with the critical-path model
+    `repro.core.costmodel.predict_sharded_us`.  The unsharded plan
+    competes in the same sweep, so the winner answers "does sharding pay
+    at all?" — `ShardedBankPlan.n_bank_shards == 1` means it does not.
+
+    Returns ``(plan, partition, schedules)``: the winning
+    `ShardedBankPlan`, its `BankPartition`, and one `BankSchedule` (or
+    ``None`` for specialized shards) per bank shard, so callers never
+    re-plan.  LRU-cached on a content digest like `autotune_bank_dispatch`.
+    ``force_shards`` pins the bank-shard count (the sweep collapses to
+    that single candidate — mode/tile per shard are still autotuned);
+    ``force_data`` pins the data-axis usage to ``"none"``, ``"channels"``
+    or ``"time"`` instead of letting the sweep decline the axis.
+    """
+    packed = np.ascontiguousarray(packed)
+    n_bank, n_data = int(mesh_shape[0]), int(mesh_shape[1])
+    key = (
+        "sharded", hashlib.sha256(packed).digest(), packed.shape, taps,
+        channels, n_bank, n_data, tile, chunk_hint,
+        resolve_interpret(interpret), force_shards, force_data,
+    )
+    if key in _AUTOTUNE_CACHE:
+        _AUTOTUNE_CACHE.move_to_end(key)
+        return _AUTOTUNE_CACHE[key]
+    result = _autotune_sharded(
+        packed, taps, channels, n_bank, n_data, tile, chunk_hint,
+        force_shards, force_data,
+    )
+    _AUTOTUNE_CACHE[key] = result
+    while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
+        _AUTOTUNE_CACHE.popitem(last=False)
+    return result
+
+
+def _shard_candidates(n_bank: int, n_filters: int) -> "list[int]":
+    """Bank-shard counts to sweep: powers of two up to the axis, the axis
+    itself, all clamped to the bank size."""
+    cands = {1}
+    c = 2
+    while c < n_bank:
+        cands.add(c)
+        c *= 2
+    cands.add(n_bank)
+    return sorted({min(c, n_filters) for c in cands})
+
+
+def _autotune_sharded(packed, taps, channels, n_bank, n_data, tile,
+                      chunk_hint, force_shards=None, force_data=None):
+    from ..core.costmodel import (PALLAS_CALL_US, SPEC_CALL_US,
+                                  ShardedBankPlan, predict_sharded_us)
+    from ..distributed.sharding import partition_bank
+
+    n_filters = packed.shape[0]
+    # data-axis candidates: using the axis (channels when divisible, else
+    # time chunks with a halo exchange) AND leaving it idle — the sweep
+    # may decline EITHER mesh axis; the engine degrades per-shard to a
+    # single-device row when nd == 1 wins
+    data_cands = [(1, "none", channels, chunk_hint)]
+    if n_data > 1:
+        if channels % n_data == 0:
+            data_cands.append(
+                (n_data, "channels", channels // n_data, chunk_hint)
+            )
+        else:
+            data_cands.append(
+                (n_data, "time", channels,
+                 max(taps, -(-chunk_hint // n_data)))
+            )
+    if force_data is not None:
+        data_cands = [c for c in data_cands if c[1] == force_data]
+        if not data_cands:
+            raise ValueError(
+                f"data mode {force_data!r} is not available on a "
+                f"({n_bank}, {n_data}) mesh with {channels} channel(s)"
+            )
+
+    if force_shards is not None:
+        candidates = [max(1, min(int(force_shards), n_bank, n_filters))]
+    else:
+        candidates = _shard_candidates(n_bank, n_filters)
+    best = None  # (ShardedBankPlan, partition, schedules)
+    for nd, data_mode, chan_local, chunk_local in data_cands:
+        for n_shards in candidates:
+            part = partition_bank(packed, n_shards, taps)
+            # two mode policies per shard count: each shard's free pick,
+            # and all-scheduled — the per-shard optimum is chosen in
+            # isolation, but specialized shards pay one HOST dispatch
+            # per filter, and the host is serial across the mesh; only
+            # the sharded objective can see that, so it must get both
+            # variants to rank
+            policies = (
+                (True, False) if data_mode == "none" else (False,)
+            )
+            for allow_spec in policies:
+                plans, schedules, costs, host = [], [], [], []
+                for rows in part.assign:
+                    sub = np.ascontiguousarray(packed[rows])
+                    plan, schedule = _autotune(
+                        sub, taps, chan_local, tile, chunk_local,
+                        allow_specialized=allow_spec,
+                    )
+                    plans.append(plan)
+                    schedules.append(schedule)
+                    costs.append(plan.predicted_us)
+                    if plan.mode == "specialized":
+                        host.append(len(rows) * chan_local * SPEC_CALL_US)
+                    else:
+                        host.append(
+                            sum(1 for g in schedule.groups if g.sel_layers)
+                            * PALLAS_CALL_US
+                        )
+                if allow_spec and not any(
+                    p.mode == "specialized" for p in plans
+                ):
+                    continue  # identical to the all-scheduled variant
+                us = predict_sharded_us(costs, nd, data_mode, host_us=host)
+                if n_shards == 1 and nd == 1:
+                    us = plans[0].predicted_us  # true unsharded baseline
+                cand = (
+                    ShardedBankPlan(
+                        n_bank_shards=n_shards,
+                        n_data=nd,
+                        data_mode=data_mode,
+                        shard_plans=tuple(plans),
+                        predicted_us=us,
+                    ),
+                    part,
+                    tuple(schedules),
+                )
+                if best is None or us < best[0].predicted_us:
+                    best = cand
     return best

@@ -1,4 +1,7 @@
-"""Serving launcher: batched greedy generation with prefill + decode steps.
+"""Serving launcher: batched greedy LM generation, or a device-sharded
+BLMAC filter-bank stream.
+
+LM serving (prefill + decode steps)::
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
         --batch 4 --prompt-len 32 --new-tokens 16
@@ -6,6 +9,15 @@
 Optionally applies BLMAC CSD-P pulse-code quantization to the checkpoint
 before serving (`--quant-planes P`) — the paper's variable-precision dot
 product as a deployment feature (weights stored/streamed at P pulses).
+
+FIR bank serving (the paper's workload, sharded over every visible XLA
+device and double-buffered through `repro.serving.AsyncBankServer`)::
+
+    PYTHONPATH=src python -m repro.launch.serve --fir-bank 256 \
+        --taps 63 --channels 1 --chunk 4096 --chunks 32
+
+Run it under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
+exercise the mesh path on a CPU host.
 """
 from __future__ import annotations
 
@@ -13,9 +25,48 @@ import argparse
 import time
 
 
+def serve_fir_bank(args) -> None:
+    import numpy as np
+
+    from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                               spread_lowpass_qbank)
+    from repro.serving import AsyncBankServer
+
+    n = args.fir_bank
+    qbank = spread_lowpass_qbank(n, args.taps)
+    engine = ShardedFilterBankEngine(
+        qbank, channels=args.channels, chunk_hint=args.chunk
+    )
+    print(f"[serve] {engine.describe()}")
+    server = AsyncBankServer(engine, depth=args.depth)
+    rng = np.random.default_rng(0)
+    stream = rng.integers(
+        -128, 128, (args.channels, args.chunk * args.chunks)
+    ).astype(np.int32)
+    done = 0
+    t0 = time.time()
+    for k in range(args.chunks):
+        chunk = stream[:, k * args.chunk: (k + 1) * args.chunk]
+        for out in server.submit(chunk):
+            done += out.shape[2]
+    outs = server.drain()
+    done += sum(o.shape[2] for o in outs)
+    dt = time.time() - t0
+    print(f"[serve] fir-bank: {done} samples/filter/channel in {dt:.2f}s "
+          f"({done / dt:.0f} samples/s/filter, "
+          f"{done * n * args.channels / dt:.3e} filter-samples/s aggregate)")
+    # spot-check the tail chunk against the exact oracle
+    if outs and outs[-1].shape[2]:
+        t = args.taps
+        tail_in = stream[:, -(outs[-1].shape[2] + t - 1):]
+        ref = fir_bit_layers_batch(tail_in, qbank)
+        assert np.array_equal(outs[-1], ref), "sharded serve output mismatch"
+        print("[serve] tail chunk bit-exact vs numpy oracle")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM architecture (omit with --fir-bank)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -23,7 +74,22 @@ def main() -> None:
     ap.add_argument("--quant-planes", type=int, default=0,
                     help="CSD-P pulse-code weight quantization (0 = off)")
     ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--fir-bank", type=int, default=0, metavar="B",
+                    help="serve a B-filter BLMAC bank instead of an LM")
+    ap.add_argument("--taps", type=int, default=63)
+    ap.add_argument("--channels", type=int, default=1)
+    ap.add_argument("--chunk", type=int, default=4096,
+                    help="samples per request chunk (fir-bank mode)")
+    ap.add_argument("--chunks", type=int, default=32)
+    ap.add_argument("--depth", type=int, default=2,
+                    help="async double-buffer depth (fir-bank mode)")
     args = ap.parse_args()
+
+    if args.fir_bank:
+        serve_fir_bank(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required unless --fir-bank is given")
 
     import jax
     import numpy as np

@@ -9,11 +9,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
-import jax
-
 from . import attention, mla, moe, rglru, ssd
 from .attention import AttnMeta
-from .common import ParamDecl, ShardCtx
+from .common import ShardCtx
 from .layers import apply_mlp, apply_norm, mlp_decls, norm_decls
 
 

@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from .blocks import BlockMeta, block_apply, block_decode, block_decls
-from .common import ParamDecl, ShardCtx, cast
+from .common import ParamDecl, ShardCtx
 from .layers import (
     apply_norm,
     embed_decls,

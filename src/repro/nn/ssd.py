@@ -11,8 +11,6 @@ optional BLMAC bit-layer evaluation path for quantized serving
 """
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -118,7 +116,9 @@ def ssd_apply(p, x, ctx: ShardCtx, cfg, meta, chunk: int | None = None):
     def chunk_body(state, i):
         # slice chunks IN PLACE (§Perf C3): scan-major xs (swapaxes) would
         # materialize a transposed copy of every activation per step
-        sl = lambda a: jax.lax.dynamic_slice_in_dim(a, i * q, q, axis=1)
+        def sl(a):
+            return jax.lax.dynamic_slice_in_dim(a, i * q, q, axis=1)
+
         xc, dtc, dac, bc, cc = sl(xs), sl(dt), sl(da), sl(bmat2), sl(cmat2)
         cs = jnp.cumsum(dac, axis=1)  # (B,Q,H) f32, ≤ 0
         # intra-chunk: L[i,j] = exp(cs_i − cs_j) for i ≥ j

@@ -28,8 +28,6 @@ from __future__ import annotations
 import dataclasses
 import math
 import re
-from typing import Any
-
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
 _NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
 _OP_RE = re.compile(r"\s*([\w\-]+)\(")

@@ -1,5 +1,17 @@
-from .engine import (ServeEngine, abstract_caches, cache_pspecs,
-                     make_decode_fn, make_prefill_fn)
+from .engine import (
+    AsyncBankServer,
+    ServeEngine,
+    abstract_caches,
+    cache_pspecs,
+    make_decode_fn,
+    make_prefill_fn,
+)
 
-__all__ = ["ServeEngine", "abstract_caches", "cache_pspecs",
-           "make_decode_fn", "make_prefill_fn"]
+__all__ = [
+    "AsyncBankServer",
+    "ServeEngine",
+    "abstract_caches",
+    "cache_pspecs",
+    "make_decode_fn",
+    "make_prefill_fn",
+]

@@ -1,4 +1,6 @@
-"""Serving: prefill + decode steps and a batched greedy engine.
+"""Serving: prefill + decode steps, a batched greedy LM engine, and the
+async double-buffered request path for sharded BLMAC filter banks
+(`AsyncBankServer`).
 
 Caches are the per-stage stacked trees produced by the scanned prefill;
 decode scans over (stage params, stage cache) in lock-step.  Variable
@@ -9,9 +11,6 @@ masked after the fact (documented limitation; continuous batching is the
 production fix).
 """
 from __future__ import annotations
-
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -145,6 +144,65 @@ def cache_pspecs(cfg, rules):
     return [
         tuple(slot_spec(m) for m in st.metas) for st in stage_plan(cfg)
     ]
+
+
+class AsyncBankServer:
+    """Double-buffered request path over a sharded BLMAC filter bank.
+
+    Wraps `repro.filters.ShardedFilterBankEngine` (or anything with its
+    ``push_async → PendingChunk`` contract) behind a bounded in-flight
+    queue: ``submit(chunk)`` dispatches the chunk's kernels onto the
+    mesh and returns immediately, so the host frames and enqueues chunk
+    ``k+1`` while the devices are still filtering chunk ``k`` — the
+    classic serve-side latency hide.  ``depth`` bounds the outstanding
+    chunks (2 = double buffering); when the queue is full, ``submit``
+    resolves the OLDEST chunk first and returns its outputs, giving a
+    strict-ordered stream with no unbounded device-memory growth.
+
+    Typical loop::
+
+        server = AsyncBankServer(engine)
+        for chunk in stream:
+            for done in server.submit(chunk):
+                consume(done)          # (B, C, n_out) int32
+        for done in server.drain():
+            consume(done)
+    """
+
+    def __init__(self, engine, depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        self.engine = engine
+        self.depth = int(depth)
+        self._inflight: list = []
+        self.chunks_in = 0
+        self.chunks_out = 0
+
+    def submit(self, chunk) -> list:
+        """Dispatch one chunk; returns the list of chunk outputs that
+        RESOLVED to make room (possibly empty, never more than one under
+        steady state)."""
+        import numpy as np
+
+        done = []
+        while len(self._inflight) >= self.depth:
+            done.append(self._inflight.pop(0).result())
+            self.chunks_out += 1
+        pending = self.engine.push_async(np.asarray(chunk))
+        self._inflight.append(pending)
+        self.chunks_in += 1
+        return done
+
+    def drain(self) -> list:
+        """Resolve every in-flight chunk, oldest first."""
+        done = [p.result() for p in self._inflight]
+        self.chunks_out += len(self._inflight)
+        self._inflight = []
+        return done
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
 
 
 class ServeEngine:

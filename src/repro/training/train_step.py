@@ -8,8 +8,6 @@ a `lax.scan` over microbatches (sequential, checkpointed).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -37,7 +35,9 @@ def abstract_train_state(cfg, decls):
     from ..nn.common import abstract_params
 
     aparams = abstract_params(decls, jnp.dtype(cfg.param_dtype))
-    sds = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    def sds(shape):
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
     if cfg.optimizer == "adamw":
         moments = jax.tree_util.tree_map(lambda p: sds(p.shape), aparams)
         opt = {"m": moments, "v": moments}
@@ -59,7 +59,9 @@ def train_state_pspecs(cfg, decls, rules):
     from ..nn.common import param_pspecs
 
     pspecs = param_pspecs(decls, rules)
-    is_spec = lambda x: isinstance(x, PartitionSpec)
+    def is_spec(x):
+        return isinstance(x, PartitionSpec)
+
     if cfg.optimizer == "adamw":
         opt = {"m": pspecs, "v": pspecs}
     else:

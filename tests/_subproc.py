@@ -2,21 +2,45 @@
 
 Multi-device tests must not pollute the main pytest process (jax locks
 the device count at first init), so they run here.
+
+Mesh-size agnosticism: the CI multi-device leg exports
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the WHOLE
+pytest run.  `run_py` therefore merges its device-count override into
+the inherited ``XLA_FLAGS`` instead of clobbering it — any other flags
+the environment carries survive, and the forced count is always the one
+the test asked for, whatever the parent session was forced to.
 """
 import os
+import re
 import subprocess
 import sys
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
+_DEVCOUNT_RE = re.compile(r"--xla_force_host_platform_device_count=\d+")
+
+
+def device_flags(devices: int, base: str = "") -> str:
+    """``base`` XLA_FLAGS with the forced host device count set to
+    ``devices`` (replacing any inherited forced count)."""
+    flags = _DEVCOUNT_RE.sub("", base).split()
+    flags.append(f"--xla_force_host_platform_device_count={devices}")
+    return " ".join(flags)
+
 
 def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["XLA_FLAGS"] = device_flags(devices, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    res = subprocess.run([sys.executable, "-c", code], env=env,
-                         capture_output=True, text=True, timeout=timeout)
+    res = subprocess.run(
+        [sys.executable, "-c", code],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
     if res.returncode != 0:
         raise AssertionError(
-            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+        )
     return res.stdout

@@ -1,5 +1,4 @@
 """Chunked online-softmax attention vs a naive reference, all variants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -4,9 +4,9 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (csd_decode, csd_digits, csd_truncate, max_pulses,
+from repro.core import (csd_decode, csd_digits, csd_truncate, max_pulses,  # noqa: E402
                         num_pulses, pack_trits, unpack_trits)
 
 

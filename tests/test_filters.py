@@ -5,10 +5,10 @@ import scipy.signal as ss
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import po2_quantize, po2_quantize_batch, fir_blmac_additions
-from repro.filters import (design_bank, fir_bit_layers, fir_direct,
+from repro.core import po2_quantize, po2_quantize_batch, fir_blmac_additions  # noqa: E402
+from repro.filters import (design_bank, fir_bit_layers, fir_direct,  # noqa: E402
                            fir_symmetric, sweep_bank, sweep_specs)
 
 

@@ -6,11 +6,11 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.configs import get_config
-from repro.nn.common import ShardCtx, init_params
-from repro.nn.moe import _positions_in_expert, moe_apply, moe_decls
+from repro.configs import get_config  # noqa: E402
+from repro.nn.common import ShardCtx, init_params  # noqa: E402
+from repro.nn.moe import _positions_in_expert, moe_apply, moe_decls  # noqa: E402
 
 
 @given(st.lists(st.integers(0, 7), min_size=1, max_size=200))

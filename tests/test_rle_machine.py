@@ -4,14 +4,14 @@ import pytest
 
 pytest.importorskip("hypothesis", reason="property tests need hypothesis "
                     "(pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra.numpy import arrays
+from hypothesis import given, settings, strategies as st  # noqa: E402
+from hypothesis.extra.numpy import arrays  # noqa: E402
 
-from repro.core import (code_count, code_count_batch, csd_digits,
+from repro.core import (code_count, code_count_batch, csd_digits,  # noqa: E402
                         decode_codes, encode_digits, encode_digits_batch,
                         po2_quantize)
-from repro.core.machine import FirBlmacMachine, MachineSpec
-from repro.filters import design_bank, fir_direct
+from repro.core.machine import FirBlmacMachine, MachineSpec  # noqa: E402
+from repro.filters import design_bank, fir_direct  # noqa: E402
 
 
 @given(st.lists(st.integers(-32768, 32767), min_size=4, max_size=64))

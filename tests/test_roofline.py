@@ -1,7 +1,6 @@
 """The HLO roofline analyzer: parser units + scanned/unrolled parity."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.roofline.hlo_analysis import (analyze_hlo, parse_def, shape_bytes,
                                          shape_dims)

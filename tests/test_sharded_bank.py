@@ -1,0 +1,275 @@
+"""Device-sharded filter-bank engine: partition balance, caller-order
+restoration, single-device degradation, mesh-aware autotuning, and the
+multi-device paths (per-shard programs, halo exchange, channel sharding)
+in a forced-8-device subprocess."""
+import numpy as np
+import pytest
+
+from repro.distributed import bank_mesh, partition_bank
+from repro.filters import (FilterBankEngine, ShardedFilterBankEngine,
+                           fir_bit_layers_batch, spread_lowpass_qbank)
+from repro.kernels.blmac_fir import pack_bank_trits
+from repro.kernels.runtime import autotune_sharded_dispatch
+from tests._subproc import run_py
+from tests.differential import adversarial_bank, five_way_check
+
+
+def _qbank(n_filters: int, taps: int = 31) -> np.ndarray:
+    return spread_lowpass_qbank(n_filters, taps)
+
+
+def _skewed_bank(taps: int = 31, n_dense: int = 8, n_sparse: int = 8,
+                 seed: int = 0) -> np.ndarray:
+    """Half dense 16-bit rows, half single-pulse rows, interleaved — the
+    occupancy-skew case where a naive round-robin split puts every dense
+    filter on the same shard."""
+    rng = np.random.default_rng(seed)
+    half = taps // 2
+    rows = []
+    for i in range(n_dense + n_sparse):
+        h = np.zeros(half + 1, np.int64)
+        if i % 2 == 0:
+            h[:] = rng.integers(-(1 << 15), 1 << 15, half + 1)
+        else:
+            h[i % (half + 1)] = 1  # single pulse, layer 0
+        rows.append(np.concatenate([h, h[:-1][::-1]]))
+    return np.stack(rows)
+
+
+# ---------------------------------------------------------------------------
+# partition specs (pure planning — no devices involved)
+# ---------------------------------------------------------------------------
+
+
+def test_partition_is_permutation_and_uneven_counts():
+    q = _qbank(13)
+    part = partition_bank(pack_bank_trits(q), 4, q.shape[1])
+    sizes = [len(a) for a in part.assign]
+    assert sum(sizes) == 13 and min(sizes) >= 1
+    order = np.concatenate(part.assign)
+    assert np.array_equal(np.sort(order), np.arange(13))
+    assert np.array_equal(order[part.inv], np.arange(13))
+
+
+def test_partition_balances_occupancy_skew():
+    q = _skewed_bank(n_dense=8, n_sparse=8)
+    packed = pack_bank_trits(q)
+    part = partition_bank(packed, 4, q.shape[1])
+    # dense rows carry ~3 orders of magnitude more pulses than the
+    # single-pulse rows: a count-equal split would leave one shard with
+    # 4 dense rows (imbalance ≈ 2); the cost-weighted cut must not
+    assert part.imbalance < 1.5, part.cost
+    # occupancy-sorted contiguity: no shard mixes the two populations
+    # more than at one boundary (signature sort groups them)
+    sigs = [packed[a].any(axis=-1).sum(axis=-1) for a in part.assign]
+    assert all(s.max() - s.min() <= 16 for s in sigs)
+
+
+def test_partition_clamps_shards_to_bank():
+    q = _qbank(3)
+    part = partition_bank(pack_bank_trits(q), 8, q.shape[1])
+    assert part.n_shards == 3
+    assert all(len(a) == 1 for a in part.assign)
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware autotuning (planning is device-free)
+# ---------------------------------------------------------------------------
+
+
+def test_autotuner_shards_wide_bank_and_declines_narrow():
+    wide = pack_bank_trits(_qbank(256, taps=63))
+    plan, part, schedules = autotune_sharded_dispatch(
+        wide, 63, channels=1, mesh_shape=(8, 1), chunk_hint=8192
+    )
+    assert plan.n_bank_shards > 1, "256-filter bank should shard on 8 devices"
+    assert len(schedules) == plan.n_bank_shards == part.n_shards
+    # a tiny bank on the same mesh: per-shard dispatch overhead swamps
+    # the work and the autotuner must decline to shard the filter axis
+    narrow = pack_bank_trits(_qbank(2, taps=31))
+    plan2, _, _ = autotune_sharded_dispatch(
+        narrow, 31, channels=1, mesh_shape=(8, 1), chunk_hint=512
+    )
+    assert plan2.n_bank_shards == 1
+    assert not plan2.sharded
+
+
+def test_autotuner_can_decline_the_data_axis():
+    packed = pack_bank_trits(_qbank(4, taps=31))
+    # short chunks on a (1, 2) mesh: the halo exchange + split overhead
+    # loses to one device per shard, so the sweep leaves the axis idle
+    plan, _, _ = autotune_sharded_dispatch(
+        packed, 31, channels=1, mesh_shape=(1, 2), chunk_hint=256
+    )
+    assert plan.n_data == 1 and plan.data_mode == "none"
+    # forcing an unavailable mode is an error, not a silent fallback
+    with pytest.raises(ValueError):
+        autotune_sharded_dispatch(
+            packed, 31, channels=3, mesh_shape=(1, 2), chunk_hint=256,
+            force_data="channels",
+        )
+
+
+def test_forced_shard_count_is_respected():
+    packed = pack_bank_trits(_qbank(16, taps=31))
+    plan, part, _ = autotune_sharded_dispatch(
+        packed, 31, channels=1, mesh_shape=(8, 1), chunk_hint=2048,
+        force_shards=4,
+    )
+    assert plan.n_bank_shards == 4 and part.n_shards == 4
+
+
+# ---------------------------------------------------------------------------
+# single-device degradation + the five-way differential
+# ---------------------------------------------------------------------------
+
+
+def test_single_device_mesh_degrades_to_plain_engine():
+    q = _qbank(9)
+    mesh = bank_mesh(1, 1)
+    eng = ShardedFilterBankEngine(q, mesh=mesh)
+    assert eng.n_bank_shards == 1 and eng.data_mode == "none"
+    plain = FilterBankEngine(q)
+    rng = np.random.default_rng(1)
+    x = rng.integers(-128, 128, 700)
+    a = eng.push(x)
+    b = plain.push(x)
+    assert np.array_equal(a, b)
+    # streaming state stays in lock-step across ragged pushes
+    for sz in (3, 250, 97):
+        x2 = rng.integers(-128, 128, sz)
+        assert np.array_equal(eng.push(x2), plain.push(x2))
+    assert eng.pending == plain.pending
+
+
+def test_five_way_differential_adversarial():
+    rep = five_way_check(adversarial_bank(taps=31), n_out=24, tile=128)
+    assert rep.sharded_mesh[0] >= 1
+
+
+def test_five_way_differential_skewed():
+    rep = five_way_check(_skewed_bank(n_dense=4, n_sparse=4), n_out=32)
+    assert rep.n_filters == 8
+
+
+# ---------------------------------------------------------------------------
+# multi-device legs (forced 8-device subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_engine_8_devices():
+    out = run_py("""
+import numpy as np
+from repro.distributed import bank_mesh
+from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+
+taps = 31
+q = spread_lowpass_qbank(13, taps)
+rng = np.random.default_rng(0)
+x = rng.integers(-128, 128, 4096)
+ref = fir_bit_layers_batch(x, q)[:, 0, :]
+
+# uneven B=13 over 4 bank shards x 2 time shards (halo exchange);
+# data_mode forced so the halo path is exercised even where the
+# autotuner would decline the data axis
+eng = ShardedFilterBankEngine(q, mesh=bank_mesh(4, 2), n_bank_shards=4,
+                              data_mode="time")
+assert eng.data_mode == "time" and eng.n_bank_shards == 4
+assert np.array_equal(eng.push(x)[:, 0, :], ref)
+print("TIME_SHARDED_OK")
+
+# streamed ragged chunks through the same mesh
+eng.reset()
+outs = []
+i = 0
+for sz in (17, 1000, 3, 2000, 1076):
+    outs.append(eng.push(x[i:i + sz]))
+    i += sz
+y = np.concatenate([o for o in outs if o.shape[2]], axis=2)[:, 0, :]
+assert np.array_equal(y, ref)
+print("STREAM_OK")
+
+# channel sharding: C=4 over the data axis, no halo needed
+C = 4
+xc = rng.integers(-128, 128, (C, 2048))
+refc = fir_bit_layers_batch(xc, q)
+engc = ShardedFilterBankEngine(q, channels=C, mesh=bank_mesh(4, 2),
+                               n_bank_shards=4, data_mode="channels")
+assert engc.data_mode == "channels"
+assert np.array_equal(engc.push(xc), refc)
+print("CHANNELS_OK")
+
+# caller-order restoration under a shuffled bank: outputs must follow
+# the CALLER's row order, not the occupancy sort
+perm = rng.permutation(13)
+engp = ShardedFilterBankEngine(q[perm], mesh=bank_mesh(8, 1))
+assert np.array_equal(engp.push(x)[:, 0, :], ref[perm])
+print("ORDER_OK")
+""", devices=8)
+    for marker in ("TIME_SHARDED_OK", "STREAM_OK", "CHANNELS_OK", "ORDER_OK"):
+        assert marker in out
+
+
+def test_five_way_differential_8_devices():
+    import os
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = run_py(f"""
+import sys
+sys.path.insert(0, {root!r})
+from tests.differential import adversarial_bank, five_way_check
+rep = five_way_check(adversarial_bank(taps=31), n_out=24, tile=128)
+assert rep.sharded_mesh[0] >= 1
+print("FIVE_WAY_8DEV_OK", rep.sharded_mesh)
+""", devices=8)
+    assert "FIVE_WAY_8DEV_OK" in out
+
+
+def test_async_double_buffered_server():
+    from repro.serving import AsyncBankServer
+
+    q = _qbank(6)
+    eng = ShardedFilterBankEngine(q)
+    server = AsyncBankServer(eng, depth=2)
+    rng = np.random.default_rng(2)
+    x = rng.integers(-128, 128, 4 * 600)
+    ref = fir_bit_layers_batch(x, q)[:, 0, :]
+    got = []
+    for k in range(4):
+        for done in server.submit(x[k * 600: (k + 1) * 600]):
+            got.append(done)
+    assert server.inflight == 2  # double buffer stayed full
+    got.extend(server.drain())
+    assert server.inflight == 0
+    y = np.concatenate([g for g in got if g.shape[2]], axis=2)[:, 0, :]
+    assert np.array_equal(y, ref)
+    assert server.chunks_in == server.chunks_out == 4
+
+
+def test_pending_chunk_result_is_idempotent():
+    q = _qbank(3)
+    eng = ShardedFilterBankEngine(q)
+    x = np.arange(500) % 100
+    p = eng.push_async(x)
+    a = p.result()
+    b = p.result()
+    assert a is b  # resolved once, cached
+
+
+def test_all_zero_bank_sharded():
+    q = np.zeros((5, 31), np.int64)
+    eng = ShardedFilterBankEngine(q)
+    x = np.random.default_rng(3).integers(-128, 128, 400)
+    y = eng.push(x)
+    assert y.shape == (5, 1, 400 - 31 + 1)
+    assert not y.any()
+
+
+def test_rejects_bad_inputs():
+    q = _qbank(4)
+    with pytest.raises(ValueError):
+        ShardedFilterBankEngine(q, channels=0)
+    eng = ShardedFilterBankEngine(q, channels=2)
+    with pytest.raises(ValueError):
+        eng.push(np.zeros((3, 100)))  # wrong channel count

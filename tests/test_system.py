@@ -5,10 +5,8 @@ BLMAC applies it with ~B_N additions, bit-exactly — validated from float
 design all the way to the Pallas kernel.  The framework: train → checkpoint
 → serve, with the BLMAC quantizer in the serving path.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import (fir_blmac_additions, po2_quantize,
                         classical_equivalent_adds)
