@@ -1,0 +1,64 @@
+"""One BLMAC program, five backends: the unified compile pipeline.
+
+The paper's pipeline — quantized taps → CSD bit layers → a pulse /
+superlayer schedule a tiny machine executes — is compiled ONCE into a
+`BlmacProgram` and every execution engine is a *backend* of that
+artifact::
+
+             coefficients (float or already-quantized int)
+                          │  compile_bank(coeffs, spec)
+                          ▼
+                    BlmacProgram  ──  save() / load()  (npz + JSON header)
+        quantized taps · packed CSD trits · occupancy signatures
+        memoized superlayer schedules · partitions · cost estimates
+                          │  lower(program, backend=...)
+        ┌───────────┬─────┴─────┬───────────┬─────────────┐
+        ▼           ▼           ▼           ▼             ▼
+     oracle    specialized  scheduled    vmachine      sharded
+     (numpy     (Pallas,    (Pallas      (§4 machine   (mesh of
+      Eq. 2)    pulse-baked) bank tiles)  simulator)    bank shards)
+
+Public surface:
+
+  * `compile_bank` / `compile_packed` — content-addressed compilation,
+  * `BlmacProgram` — the artifact (schedules, partitions, cycle and
+    latency predictions all memoized on it),
+  * `lower` — executables for the five backends,
+  * `plan_bank_schedule` / `BankSchedule` / `superlayer_schedule` — the
+    pack-time scheduler (moved here from ``kernels/blmac_fir.py``),
+  * `cache_stats` / `clear_caches` — one observability point for every
+    compile-pipeline cache.
+
+`repro.filters.FilterBankEngine`, `ShardedFilterBankEngine`,
+`repro.serving.AsyncBankServer` and both autotuners are thin clients of
+this package.
+"""
+from .cache import cache_stats, clear_caches
+from .lowering import BACKENDS, Lowered, lower
+from .program import (BlmacProgram, CompileSpec, PROGRAM_FORMAT_VERSION,
+                      ProgramFormatError, compile_bank, compile_packed,
+                      pack_bank_trits)
+from .schedule import (BankSchedule, MERGE_DEFAULT, TileGroup,
+                       default_bank_tile, plan_bank_schedule,
+                       superlayer_schedule)
+
+__all__ = [
+    "BACKENDS",
+    "BankSchedule",
+    "BlmacProgram",
+    "CompileSpec",
+    "Lowered",
+    "MERGE_DEFAULT",
+    "PROGRAM_FORMAT_VERSION",
+    "ProgramFormatError",
+    "TileGroup",
+    "cache_stats",
+    "clear_caches",
+    "compile_bank",
+    "compile_packed",
+    "default_bank_tile",
+    "lower",
+    "pack_bank_trits",
+    "plan_bank_schedule",
+    "superlayer_schedule",
+]

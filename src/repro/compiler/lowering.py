@@ -1,0 +1,163 @@
+"""`lower(program, backend=...)`: one compiled program, five executables.
+
+Every execution engine in this repo is a *backend* of the same compiled
+artifact.  `lower` returns a callable ``exe(x) -> (B, C, n_out)`` (``x``
+is ``(C, T)`` or ``(T,)`` integer samples) for:
+
+  * ``"oracle"``      — the numpy Eq. 2 reference
+    (`fir_bit_layers_batch`).  Deliberately the naive dense bit-layer
+    recursion reading only ``program.qbank``: it is the independent
+    ground truth the other backends are differentially verified against,
+    so it must not share the schedule mechanism under test.  int64.
+  * ``"specialized"`` — per-filter pulse-baked Pallas programs
+    (`specialized_program` LRU) from ``program.pulse_schedules()``. int32.
+  * ``"scheduled"``   — the sparsity-scheduled bank kernel on
+    ``program.packed`` with the memoized ``program.schedule()``. int32.
+  * ``"vmachine"``    — the vectorized §4 machine simulator programmed
+    with the bank; the executable exposes ``.vmachine`` and ``.fits``
+    (weight-memory verdicts). int64.
+  * ``"sharded"``     — a `ShardedFilterBankEngine` built FROM the
+    program over a (bank, data) mesh; exposes ``.engine``.  One-shot
+    semantics (the engine is reset per call). int32.
+
+All five agree bit-for-bit on integer inputs — `tests/differential.py`
+proves it on one shared program.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .program import BlmacProgram
+
+__all__ = ["BACKENDS", "Lowered", "lower"]
+
+BACKENDS = ("oracle", "specialized", "scheduled", "vmachine", "sharded")
+
+
+class Lowered:
+    """An executable lowered from a `BlmacProgram` for one backend.
+
+    Callable ``exe(x) -> np.ndarray (B, C, n_out)``; backend-specific
+    handles (``.vmachine``, ``.fits``, ``.engine``) are attached as
+    attributes where the backend has them.
+    """
+
+    def __init__(self, fn, backend: str, program: BlmacProgram, **extras):
+        self._fn = fn
+        self.backend = backend
+        self.program = program
+        for name, value in extras.items():
+            setattr(self, name, value)
+
+    def __call__(self, x) -> np.ndarray:
+        return self._fn(x)
+
+    def __repr__(self) -> str:
+        return f"Lowered({self.backend}, {self.program!r})"
+
+
+def _as_channels(x) -> np.ndarray:
+    x = np.asarray(x)
+    return x[None, :] if x.ndim == 1 else x
+
+
+def lower(
+    program: BlmacProgram,
+    backend: str = "scheduled",
+    *,
+    channels: int = 1,
+    tile: int | None = None,
+    bank_tile: int | None = None,
+    merge: int | None = None,
+    interpret: bool | None = None,
+    machine_spec=None,
+    mesh=None,
+) -> Lowered:
+    """Lower ``program`` to an executable for ``backend`` (see module doc).
+
+    ``channels``/``mesh`` configure the sharded engine (the other
+    backends infer C from the input); ``tile``/``bank_tile``/``merge``
+    pin kernel geometry; ``machine_spec`` is the vmachine's
+    `MachineSpec` (default: the paper's parameters at this tap count).
+    """
+    if not isinstance(program, BlmacProgram):
+        raise TypeError("lower() needs a BlmacProgram — call compile_bank")
+    if backend == "oracle":
+        from ..filters.apply import fir_bit_layers_batch
+
+        qbank = program.qbank
+
+        def run_oracle(x):
+            return fir_bit_layers_batch(_as_channels(x), qbank)
+
+        return Lowered(run_oracle, backend, program)
+
+    if backend == "specialized":
+        import jax.numpy as jnp
+
+        from ..kernels.blmac_fir import blmac_fir_specialized
+
+        pulses = program.pulse_schedules()
+        taps = program.taps
+        tile = tile or 1024
+
+        def run_specialized(x):
+            xi = jnp.asarray(_as_channels(x), jnp.int32)
+            n_out = xi.shape[-1] - taps + 1
+            return np.stack([
+                np.stack([
+                    np.asarray(
+                        blmac_fir_specialized(xi[c], p, taps, tile, interpret)
+                    )[:n_out]
+                    for c in range(xi.shape[0])
+                ])
+                for p in pulses
+            ])
+
+        return Lowered(run_specialized, backend, program)
+
+    if backend == "scheduled":
+        from ..kernels.blmac_fir import blmac_fir_bank
+
+        sched = program.schedule(bank_tile, merge)
+        tile = tile or 1024
+
+        def run_scheduled(x):
+            return np.asarray(blmac_fir_bank(
+                _as_channels(x), program.packed, program.taps, tile,
+                interpret=interpret, schedule=sched, fast_path=False,
+            ))
+
+        return Lowered(run_scheduled, backend, program, schedule=sched)
+
+    if backend == "vmachine":
+        from ..core.machine import MachineSpec
+        from ..core.vmachine import FirBlmacVMachine
+
+        spec = machine_spec or MachineSpec(taps=program.taps)
+        vm = FirBlmacVMachine(spec)
+        fits = vm.program_bank(program.qbank)
+
+        def run_vmachine(x):
+            x2 = _as_channels(x)
+            return np.stack(
+                [vm.run(x2[c]).outputs for c in range(x2.shape[0])], axis=1
+            )
+
+        return Lowered(run_vmachine, backend, program, vmachine=vm, fits=fits)
+
+    if backend == "sharded":
+        from ..filters.sharded import ShardedFilterBankEngine
+
+        eng = ShardedFilterBankEngine(
+            program, channels=channels, mesh=mesh, tile=tile, merge=merge,
+            interpret=interpret,
+        )
+
+        def run_sharded(x):
+            eng.reset()
+            return eng.push(_as_channels(x))
+
+        return Lowered(run_sharded, backend, program, engine=eng)
+
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")

@@ -24,6 +24,7 @@ __all__ = [
     "csd_truncate",
     "pack_trits",
     "unpack_trits",
+    "packed_pulse_counts",
     "require_type1",
     "assert_int32_bound",
     "layer_occupancy",
@@ -213,3 +214,15 @@ def unpack_trits(words: np.ndarray, n: int) -> np.ndarray:
     trits = np.where(codes == 1, 1, np.where(codes == 3, -1, 0)).astype(np.int8)
     out = trits.reshape(w.shape[:-1] + (w.shape[-1] * 16,))
     return out[..., :n]
+
+
+def packed_pulse_counts(packed: np.ndarray) -> np.ndarray:
+    """(B, n_layers, n_words) packed trit words → (B,) int64 non-zero trit
+    (= BLMAC pulse, §3.3) counts per filter, read straight off the 2-bit
+    codes without unpacking.  The single popcount shared by
+    `repro.compiler.BlmacProgram` and the shard balancer
+    (`repro.distributed.sharding.bank_filter_costs`)."""
+    w = np.asarray(packed, dtype=np.uint32)
+    shifts = 2 * np.arange(16, dtype=np.uint32)
+    codes = (w[..., None] >> shifts) & np.uint32(3)
+    return (codes != 0).sum(axis=(1, 2, 3)).astype(np.int64)

@@ -235,18 +235,13 @@ def bank_filter_costs(packed: np.ndarray, taps: int) -> np.ndarray:
 
     The pulse count is exactly the paper's §3.3 add count, read straight
     off the packed trit words (each populated 2-bit code is one add in
-    every kernel mode), so the balancer and the cost model agree on what
-    "one filter's work" means.
+    every kernel mode, `core.csd.packed_pulse_counts` — the same popcount
+    `BlmacProgram.pulse_counts` stores), so the balancer and the cost
+    model agree on what "one filter's work" means.
     """
-    from ..kernels.blmac_fir import TRITS_PER_WORD
+    from ..core.csd import packed_pulse_counts
 
-    packed = np.asarray(packed)
-    codes = (
-        packed[..., None]
-        >> (2 * np.arange(TRITS_PER_WORD, dtype=np.uint32))
-    ) & np.uint32(3)
-    pulses = (codes != 0).sum(axis=(1, 2, 3))
-    return pulses.astype(np.float64) + taps // 2
+    return packed_pulse_counts(packed).astype(np.float64) + taps // 2
 
 
 def partition_bank(
@@ -254,6 +249,7 @@ def partition_bank(
     n_shards: int,
     taps: int,
     cost: np.ndarray | None = None,
+    sig: np.ndarray | None = None,
 ) -> BankPartition:
     """Occupancy-balanced contiguous partition of a packed bank.
 
@@ -265,6 +261,11 @@ def partition_bank(
     a dense shard from straggling the mesh.  Shards may carry unequal
     filter counts — per-shard programs are compiled per shard, so no
     SPMD padding is needed.  ``n_shards`` is clamped to the bank size.
+
+    ``cost``/``sig`` let a `repro.compiler.BlmacProgram` supply its
+    precomputed per-filter costs and occupancy signatures (the
+    `BlmacProgram.partition` hook does) instead of re-deriving them from
+    the packed words here.
     """
     from ..core.csd import occupancy_signatures
 
@@ -276,7 +277,8 @@ def partition_bank(
     if cost is None:
         cost = bank_filter_costs(packed, taps)
     cost = np.asarray(cost, np.float64)
-    sig = occupancy_signatures(packed.any(axis=-1))
+    if sig is None:
+        sig = occupancy_signatures(packed.any(axis=-1))
     order = np.argsort(sig, kind="stable")
     csum = np.cumsum(cost[order])
     total = csum[-1]

@@ -6,9 +6,18 @@ window (the machine's orientation; flip w for convolution):
   * ``fir_direct``      — classical MACs,
   * ``fir_symmetric``   — Eq. 3 pre-add + half-length dot,
   * ``fir_bit_layers``  — Eq. 2: Horner over CSD bit layers, no multiplies
-                          (the algorithm the Pallas kernel implements).
+                          (the algorithm the Pallas kernel implements); the
+                          type-I path delegates to ``fir_bit_layers_batch``
+                          so single-filter and bank semantics are one code
+                          path.
 
 All three must agree bit-for-bit on integer inputs (property-tested).
+
+``fir_bit_layers_batch`` is the repo's independent ground truth: the
+``"oracle"`` backend of `repro.compiler.lower` reads only the compiled
+program's quantized coefficients and runs the naive dense Eq. 2 loop
+below — deliberately sharing NO schedule machinery with the kernels it
+verifies.
 """
 from __future__ import annotations
 
@@ -57,6 +66,13 @@ def fir_bit_layers(x: np.ndarray, w: np.ndarray, symmetric: bool = True) -> np.n
     One vectorized add per *pulse* across all outputs — the numpy analogue
     of both the FPGA machine (pulse-serial over one sample) and the Pallas
     kernel (pulse-serial over a 128-lane tile).
+
+    The symmetric (type-I) path is a thin shim over the batched bank
+    oracle `fir_bit_layers_batch` — a B=1, C=1 bank — so the pre-bank
+    single-filter code path cannot drift from the bank semantics every
+    kernel is verified against.  Only the ``symmetric=False`` variant
+    (which has no bank equivalent: banks require type-I filters) keeps
+    its own pulse-serial loop.
     """
     x = np.asarray(x, np.int64)
     w = np.asarray(w, np.int64)
@@ -64,16 +80,9 @@ def fir_bit_layers(x: np.ndarray, w: np.ndarray, symmetric: bool = True) -> np.n
     if symmetric:
         if n % 2 == 0 or not np.array_equal(w, w[::-1]):
             raise ValueError("symmetric path needs a type-I filter")
-        half = n // 2
-        win = sliding_windows(x, n)
-        data = np.concatenate(
-            [win[:, :half] + win[:, n - 1 : half:-1], win[:, half:half + 1]], axis=1
-        )  # (T', N/2+1)
-        coeffs = w[: half + 1]
-    else:
-        data = sliding_windows(x, n)
-        coeffs = w
-    digits = csd_digits(coeffs)  # (M, L) LSB-first
+        return fir_bit_layers_batch(x, w)[0, 0, :]
+    data = sliding_windows(x, n)
+    digits = csd_digits(w)  # (M, L) LSB-first
     acc = np.zeros(data.shape[0], np.int64)
     for layer in range(digits.shape[1] - 1, -1, -1):  # MSB → LSB
         acc <<= 1

@@ -22,10 +22,18 @@ Mode selection mirrors the hardware trade-off:
     calibrated cost model in `repro.core.costmodel` and keeps the
     winner's plan — no threshold guessing.
 
+Since the one-program refactor the engine is a thin client of
+`repro.compiler`: construction compiles (or is handed) ONE
+`BlmacProgram` and reads everything off it — the packed trit operands,
+the memoized superlayer schedule, the per-filter pulse schedules of
+specialized mode, and the §4 cycle predictions.  Two engines built on
+the same bank share one program (content-addressed), and an engine built
+from a `BlmacProgram.load()`ed file starts without recompiling anything.
+
 Arithmetic contract: int32 throughout.  The §2.1 bound (16-bit coeffs ×
-8-bit samples × ≤255 taps) is asserted ONCE, inside `pack_bank_trits`
-at construction — neither `push` nor the kernels re-check it, and
-`blmac_fir_dynamic` documents the identical guarantee.
+8-bit samples × ≤255 taps) is asserted ONCE, inside `compile_bank` —
+neither `push` nor the kernels re-check it, and `blmac_fir_dynamic`
+documents the identical guarantee.
 
 Bit-exactness: all modes agree with `repro.filters.fir_bit_layers_batch`
 to the last bit on integer inputs (property-tested in `tests/test_bank.py`
@@ -35,8 +43,6 @@ from __future__ import annotations
 
 import numpy as np
 import jax.numpy as jnp
-
-from ..core.csd import require_type1
 
 from ..kernels.runtime import DEFAULT_TILE
 
@@ -53,8 +59,11 @@ class FilterBankEngine:
 
     Parameters
     ----------
-    qbank : (B, taps) or (taps,) int array
-        Quantized odd symmetric (type-I) coefficients, one row per filter.
+    qbank : (B, taps) or (taps,) int array, or `repro.compiler.BlmacProgram`
+        Quantized odd symmetric (type-I) coefficients, one row per filter
+        — compiled via `compile_bank` (content-addressed, so repeated
+        constructions of the same bank share one artifact).  Passing a
+        prebuilt / `load()`ed program skips compilation entirely.
     channels : int
         Number of independent input channels C (all filtered by every filter).
     tile : int | None
@@ -86,32 +95,38 @@ class FilterBankEngine:
         merge: int | None = None,
         chunk_hint: int = 2048,
     ):
-        from ..kernels.blmac_fir import (MERGE_DEFAULT, pack_bank_trits,
-                                         plan_bank_schedule, pulses_msb_first)
+        from ..compiler import BlmacProgram, MERGE_DEFAULT, compile_bank
         from ..kernels.runtime import autotune_bank_dispatch
 
-        qbank = np.atleast_2d(np.asarray(qbank, np.int64))
-        if qbank.ndim != 2:
-            raise ValueError("qbank must be (n_filters, taps)")
-        taps = require_type1(qbank, "FilterBankEngine")
+        if isinstance(qbank, BlmacProgram):
+            program = qbank
+        else:
+            # CSD encoding, trit packing and the §2.1 int32 bound all
+            # happen in here — exactly once per distinct bank content,
+            # however many engines are built.  The int64 cast preserves
+            # this constructor's historical contract (float input is
+            # truncated, not quantized — pass the bank through
+            # `compile_bank` yourself for §3.2 po2 quantization).
+            program = compile_bank(
+                np.atleast_2d(np.asarray(qbank, np.int64))
+            )
         if channels < 1:
             raise ValueError("channels must be >= 1")
         if mode == "scheduled":
             mode = "packed"
         if mode not in ("auto", "packed", "specialized"):
             raise ValueError(f"unknown mode {mode!r}")
-        self.qbank = qbank
-        self.n_filters = int(qbank.shape[0])
-        self.taps = int(taps)
+        self.program = program
+        self.qbank = program.qbank
+        self.n_filters = program.n_filters
+        self.taps = program.taps
         self.channels = int(channels)
         self.interpret = interpret
-        # int32 bound asserted in here — once, for every downstream path
-        packed = pack_bank_trits(qbank)
         self.dispatch_plan = None
         schedule = None
         if mode == "auto":
             self.dispatch_plan, schedule = autotune_bank_dispatch(
-                packed, self.taps, self.channels, tile,
+                program, channels=self.channels, tile=tile,
                 chunk_hint=chunk_hint, interpret=interpret,
             )
             mode = (
@@ -129,17 +144,17 @@ class FilterBankEngine:
         self.mode = mode
         self.merge = merge if merge is not None else MERGE_DEFAULT
         if mode == "packed":
-            # plan once (sort, group, compact layers), upload each tile
-            # group's packed operand ONCE; push() then feeds device-
-            # resident operands instead of re-staging the bank every chunk.
-            # An autotuned schedule is reused only when it matches the
-            # caller's explicit bank_tile/merge overrides.
+            # the program memoizes one plan per (bank_tile, merge) — the
+            # autotuned schedule and an explicit-override re-plan resolve
+            # through the same memo; upload each tile group's packed
+            # operand ONCE so push() feeds device-resident operands
+            # instead of re-staging the bank every chunk
             if (
                 schedule is None
                 or (bank_tile is not None and bank_tile != schedule.tile_size)
                 or schedule.merge != self.merge
             ):
-                schedule = plan_bank_schedule(packed, bank_tile, self.merge)
+                schedule = program.schedule(bank_tile, self.merge)
             self.bank_schedule = schedule
             self.bank_tile = schedule.tile_size
             self._group_ops = [
@@ -151,12 +166,11 @@ class FilterBankEngine:
             self.bank_schedule = None
             self.bank_tile = bank_tile
             self._group_ops = None
-            self._schedules = [pulses_msb_first(row) for row in qbank]
+            self._schedules = program.pulse_schedules()
         # overlap-save state: the last taps-1 samples of every channel
         self._tail = np.zeros((channels, 0), np.int32)
         self.samples_in = 0
         self.samples_out = 0
-        self._cycle_cache: dict[tuple, np.ndarray] = {}
 
     # -- cost model ---------------------------------------------------------
 
@@ -165,30 +179,14 @@ class FilterBankEngine:
         FPGA dot-product machine (one cycle per RLE code + overhead).
 
         ``spec`` is a `repro.core.MachineSpec` (default: the paper's
-        127-tap spec parameters applied to this bank's tap count); results
-        are cached per spec.  Agrees exactly with both simulators —
-        `FirBlmacVMachine` asserts this in `tests/differential.py`.
+        127-tap spec parameters applied to this bank's tap count).  Reads
+        `BlmacProgram.machine_cycles` — derived from the program's own
+        CSD digits and memoized per spec ON THE PROGRAM, so every engine,
+        benchmark and test sharing this bank shares one computation.
+        Agrees exactly with both simulators — `FirBlmacVMachine` asserts
+        this in `tests/differential.py`.
         """
-        from ..core.costmodel import machine_cycles_batch
-        from ..core.machine import MachineSpec
-
-        if spec is None:
-            spec = MachineSpec(taps=self.taps)
-        if spec.taps != self.taps:
-            raise ValueError(
-                f"spec is for {spec.taps} taps, bank has {self.taps}"
-            )
-        key = (spec.n_layers, spec.start_overhead, spec.fused_last_add)
-        if key not in self._cycle_cache:
-            cycles = machine_cycles_batch(
-                self.qbank,
-                n_layers=spec.n_layers,
-                overhead=spec.start_overhead,
-                fused_last_add=spec.fused_last_add,
-            )
-            cycles.setflags(write=False)  # shared cache entry: no mutation
-            self._cycle_cache[key] = cycles
-        return self._cycle_cache[key]
+        return self.program.machine_cycles(spec)
 
     def predicted_mean_cycles(self, spec=None) -> float:
         """Bank-average §4 machine cycles per output sample."""

@@ -38,7 +38,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.csd import require_type1
 from ..distributed.collectives import (get_shard_map, halo_exchange_left,
                                        shard_map_no_check_kwargs)
 from ..distributed.sharding import DATA_AXIS, bank_mesh, mesh_bank_shape
@@ -89,8 +88,12 @@ class ShardedFilterBankEngine:
 
     Parameters
     ----------
-    qbank : (B, taps) or (taps,) int array
-        Quantized odd symmetric (type-I) coefficients, one row per filter.
+    qbank : (B, taps) or (taps,) int array, or `repro.compiler.BlmacProgram`
+        Quantized odd symmetric (type-I) coefficients, one row per filter
+        — compiled once via `compile_bank` (content-addressed); passing a
+        prebuilt / `load()`ed program warm-starts without recompiling.
+        Shard subprograms are the program's memoized `select()` slices,
+        shared with the mesh autotuner.
     channels : int
         Independent input channels C (all filtered by every filter).
     mesh : jax.sharding.Mesh | None
@@ -123,22 +126,29 @@ class ShardedFilterBankEngine:
         chunk_hint: int = 2048,
         interpret: bool | None = None,
     ):
-        from ..kernels.blmac_fir import pack_bank_trits, plan_bank_schedule
+        from ..compiler import BlmacProgram, compile_bank
         from ..kernels.runtime import (autotune_sharded_dispatch,
                                        resolve_interpret)
 
-        qbank = np.atleast_2d(np.asarray(qbank, np.int64))
-        if qbank.ndim != 2:
-            raise ValueError("qbank must be (n_filters, taps)")
-        taps = require_type1(qbank, "ShardedFilterBankEngine")
+        if isinstance(qbank, BlmacProgram):
+            program = qbank
+        else:
+            # CSD, packing and the §2.1 int32 bound — once, content-
+            # addressed, shared with every other client.  int64 cast as
+            # in `FilterBankEngine`: float input keeps its historical
+            # truncation semantics; quantize via `compile_bank` directly.
+            program = compile_bank(
+                np.atleast_2d(np.asarray(qbank, np.int64))
+            )
         if channels < 1:
             raise ValueError("channels must be >= 1")
         if mesh is None:
             mesh = bank_mesh()
         self.mesh = mesh
-        self.qbank = qbank
-        self.n_filters = int(qbank.shape[0])
-        self.taps = int(taps)
+        self.program = program
+        self.qbank = program.qbank
+        self.n_filters = program.n_filters
+        self.taps = program.taps
         self.channels = int(channels)
         self.interpret = resolve_interpret(interpret)
         n_bank, n_data = mesh_bank_shape(mesh)
@@ -146,28 +156,25 @@ class ShardedFilterBankEngine:
             raise ValueError(
                 f"mesh must be ({'bank'}, {'data'})-shaped, got {mesh.shape}"
             )
-        # int32 bound (§2.1) asserted once, in here
-        packed = pack_bank_trits(qbank)
         force = None
         if n_bank_shards is not None:
             force = max(1, min(int(n_bank_shards), n_bank, self.n_filters))
         self.plan, self.partition, schedules = autotune_sharded_dispatch(
-            packed, self.taps, self.channels, (n_bank, n_data),
+            program, channels=self.channels, mesh_shape=(n_bank, n_data),
             tile=tile, chunk_hint=chunk_hint, interpret=interpret,
             force_shards=force, force_data=data_mode,
         )
         if merge is not None:
             # re-plan only the scheduled shards whose merge differs,
             # KEEPING each shard's autotuned bank tile, and stamp the
-            # override into the shard plans; predicted_us intentionally
-            # keeps the autotuner's estimate for ITS schedules — the
-            # cost model is not re-run for a hand-forced merge
+            # override into the shard plans; the re-plan goes through the
+            # shard subprogram's schedule memo, and predicted_us
+            # intentionally keeps the autotuner's estimate for ITS
+            # schedules — the cost model is not re-run for a forced merge
             import dataclasses
 
             schedules = tuple(
-                plan_bank_schedule(
-                    np.ascontiguousarray(packed[rows]), sched.tile_size, merge
-                )
+                program.select(rows).schedule(sched.tile_size, merge)
                 if sched is not None and sched.merge != merge else sched
                 for rows, sched in zip(self.partition.assign, schedules)
             )
@@ -201,8 +208,8 @@ class ShardedFilterBankEngine:
         ):
             self._shards.append(
                 self._build_shard(
-                    np.ascontiguousarray(packed[rows]), plan,
-                    schedules[s], devices[s % n_bank],
+                    program.select(rows),  # the autotuner's exact subprogram
+                    plan, schedules[s], devices[s % n_bank],
                 )
             )
         # overlap-save state: the last taps-1 samples of every channel
@@ -212,17 +219,15 @@ class ShardedFilterBankEngine:
 
     # -- construction helpers ----------------------------------------------
 
-    def _build_shard(self, packed_s, plan, schedule, dev_row):
+    def _build_shard(self, subprogram, plan, schedule, dev_row):
         """One bank shard = (dispatch closure, device row).  Returns a
         callable ``fn(buf_np, n) -> device output`` where ``buf_np`` is
-        the padded (C, n_pad) int32 buffer and ``n`` the valid length."""
-        from ..kernels.blmac_fir import pulses_from_packed
-
+        the padded (C, n_pad) int32 buffer and ``n`` the valid length.
+        ``subprogram`` is the shard's `BlmacProgram` slice — its pulse
+        schedules and packed operands are the memoized artifacts the
+        autotuner already costed."""
         if plan.mode == "specialized":  # n_data == 1 by construction
-            pulses = [
-                pulses_from_packed(packed_s[b], self.taps)
-                for b in range(packed_s.shape[0])
-            ]
+            pulses = subprogram.pulse_schedules()
             dev = dev_row[0]
 
             def run_specialized(buf, n):

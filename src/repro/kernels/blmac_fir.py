@@ -46,25 +46,31 @@ Input layout: the host frames each channel into overlapping tiles
 one frame per grid step into VMEM.  The ~taps/tile halo duplication
 (≈12% at tile=1024, taps=127) is the price of clean non-overlapping
 BlockSpecs and is counted in the roofline maths.
+
+Since the one-program refactor this module is pure *execution*: the
+pack-time half of the pipeline (trit packing, occupancy sorting,
+superlayer scheduling) lives in `repro.compiler` — `pack_bank_trits`,
+`plan_bank_schedule`, `BankSchedule` and friends are re-exported here
+for backward compatibility.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from ..core.csd import (assert_int32_bound, csd_decode, csd_digits,
-                        occupancy_signatures, pack_trits, require_type1,
-                        unpack_trits)
+from ..compiler.program import compile_packed, pack_bank_trits  # noqa: F401
+from ..compiler.schedule import (  # noqa: F401 — re-exported, moved in PR 5
+    BankSchedule, MAX_BANK_TILE, MERGE_DEFAULT, TileGroup, default_bank_tile,
+    plan_bank_schedule, superlayer_schedule)
+from ..core.csd import csd_digits, pack_trits, unpack_trits
 from .runtime import resolve_interpret
 
 LANE = 128
 TRITS_PER_WORD = 16
-MAX_BANK_TILE = 256  # acc VMEM at tile=1024: 256×1024×4 B = 1 MiB
 
 
 def _pad_to(n: int, m: int) -> int:
@@ -300,202 +306,6 @@ def _bank_call(
     )(frames, packed)
 
 
-def pack_bank_trits(
-    qbank: np.ndarray,
-    n_layers: int | None = None,
-    sample_bits: int = 8,
-) -> np.ndarray:
-    """(B, taps) symmetric int coefficients → (B, n_layers, n_words) uint32
-    packed trit words over the folded half-filter (M = taps//2 + 1 rows),
-    layer-major so the kernel slices one layer per Horner step.
-
-    The int32 accumulator bound (§2.1) is asserted HERE, once per pack —
-    `blmac_fir_bank`, `blmac_fir_dynamic` and `FilterBankEngine` all
-    consume packed operands and inherit the guarantee for ``sample_bits``
-    inputs (default 8-bit, the paper's operating point)."""
-    qbank = np.asarray(qbank, np.int64)
-    if qbank.ndim != 2:
-        raise ValueError("qbank must be (n_filters, taps)")
-    taps = require_type1(qbank, "bank kernel")
-    assert_int32_bound(qbank, sample_bits, "bank kernel")
-    half = taps // 2
-    digits = csd_digits(qbank[:, : half + 1], n_digits=n_layers)  # (B, M, L)
-    return pack_trits(np.swapaxes(digits, 1, 2))  # (B, L, n_words)
-
-
-def default_bank_tile(n_filters: int) -> int:
-    """Bank-tile heuristic: whole bank in one tile up to the VMEM cap;
-    above the cap, size the tile so the padded bank tracks n_filters
-    (257 filters → 2 tiles of 136, not 2 tiles of 256)."""
-    n = max(n_filters, 1)
-    if n <= MAX_BANK_TILE:
-        return _pad_to(n, 8)
-    n_tiles = -(-n // MAX_BANK_TILE)
-    return _pad_to(-(-n // n_tiles), 8)
-
-
-# ---------------------------------------------------------------------------
-# bank-wide sparsity schedule (pack-time planning)
-# ---------------------------------------------------------------------------
-
-# CSD layers fused per superlayer matmul (see plan_bank_schedule): the
-# measured optimum on the reference machine; 1 recovers the paper-pure
-# one-matmul-per-bit-layer kernel, 7 keeps superlayer digits in int8
-# range for MXU operand packing.
-MERGE_DEFAULT = 8
-
-
-def superlayer_schedule(
-    populated: tuple[int, ...], merge: int
-) -> tuple[tuple, int, tuple[int, ...]]:
-    """Compile a populated-layer set into a static Horner schedule.
-
-    ``populated`` are the bit-layer indices holding ≥1 pulse anywhere in
-    the bank tile.  Greedy MSB-first, layers within a span of ``merge``
-    positions fuse into one superlayer (digit values then span
-    ±(2^merge − 1), still far inside int32 given the pack-time bound).
-
-    Returns ``(schedule, tail_shift, sel_layers)``:
-      * ``schedule`` — tuple of ``(shift_in, ((sel_idx, rel_weight), …))``
-        entries, MSB first, consumed verbatim by `_fir_kernel_bank`;
-      * ``tail_shift`` — final left shift down to layer 0;
-      * ``sel_layers`` — the packed-layer indices to gather, MSB first
-        (``sel_idx`` indexes this tuple).
-    """
-    if merge < 1:
-        raise ValueError("merge must be >= 1")
-    layers = sorted((int(lyr) for lyr in populated), reverse=True)
-    if not layers:
-        return (), 0, ()
-    runs: list[list[int]] = [[layers[0]]]
-    for lyr in layers[1:]:
-        if runs[-1][0] - lyr < merge:  # span (hi − lo) stays < merge
-            runs[-1].append(lyr)
-        else:
-            runs.append([lyr])
-    schedule = []
-    sel_layers: list[int] = []
-    prev_lo = None
-    for run in runs:  # each run: descending layer indices
-        lo = run[-1]
-        shift_in = 0 if prev_lo is None else prev_lo - lo
-        parts = tuple(
-            (len(sel_layers) + i, lyr - lo) for i, lyr in enumerate(run)
-        )
-        sel_layers.extend(run)
-        schedule.append((shift_in, parts))
-        prev_lo = lo
-    return tuple(schedule), prev_lo, tuple(sel_layers)
-
-
-@dataclass(frozen=True)
-class TileGroup:
-    """A run of consecutive (post-sort) bank tiles sharing one compiled
-    schedule — dispatched as one `pallas_call` with a tile-count grid."""
-
-    schedule: tuple  # static Horner program (see superlayer_schedule)
-    tail_shift: int
-    sel_layers: tuple[int, ...]  # packed layer indices gathered, MSB first
-    packed: np.ndarray  # (n_tiles * bank_tile, n_sel, n_words) uint32
-    n_filters: int  # valid (non-pad) rows covered by this group
-
-
-@dataclass(frozen=True)
-class BankSchedule:
-    """Pack-time product of `plan_bank_schedule`: occupancy-sorted filter
-    permutation + per-group layer-skip schedules."""
-
-    tile_size: int  # bank_tile
-    merge: int
-    perm: np.ndarray  # (B,) original index of the filter in permuted slot p
-    inv: np.ndarray  # (B,) permuted slot of original filter b
-    groups: tuple[TileGroup, ...]
-    n_filters: int
-
-    @property
-    def n_superlayers(self) -> int:
-        """Total scheduled matmuls per grid step, summed over groups —
-        the quantity the dense kernel fixed at n_layers per tile."""
-        return sum(len(g.schedule) for g in self.groups)
-
-
-def plan_bank_schedule(
-    packed: np.ndarray,
-    bank_tile: int | None = None,
-    merge: int = MERGE_DEFAULT,
-) -> BankSchedule:
-    """Sort a packed bank into occupancy-homogeneous tiles and compile a
-    layer-skip schedule per tile group.
-
-    Filters are ordered by their layer-occupancy signature (a bitmask of
-    populated layers), partitioned into ``bank_tile`` rows, and each
-    tile's schedule is built from the UNION occupancy of its rows — so a
-    tile of truncated / low-precision / narrow-band filters never pays
-    for layers only its neighbours populate.  Consecutive tiles with an
-    identical schedule fuse into one `pallas_call` (one `TileGroup`).
-    A tile whose union is empty (all-zero filters) is scheduled as a
-    constant zero block — no kernel runs at all.
-    """
-    packed = np.asarray(packed)
-    n_filters, n_layers, n_words = packed.shape
-    if bank_tile is None:
-        bank_tile = default_bank_tile(n_filters)
-    occ = packed.any(axis=-1)  # (B, L) bool: layer populated in filter b
-    sig = occupancy_signatures(occ)
-    perm = np.argsort(sig, kind="stable")
-    inv = np.empty(n_filters, np.int64)
-    inv[perm] = np.arange(n_filters)
-    b_pad = _pad_to(n_filters, bank_tile)
-    occ_p = np.zeros((b_pad, n_layers), bool)
-    occ_p[:n_filters] = occ[perm]
-    packed_p = np.zeros((b_pad, n_layers, n_words), packed.dtype)
-    packed_p[:n_filters] = packed[perm]
-
-    groups: list[TileGroup] = []
-    run_tiles: list[int] = []  # tile indices of the open run
-    run_key = None
-    n_tiles = b_pad // bank_tile
-
-    def close_run():
-        if not run_tiles:
-            return
-        schedule, tail_shift, sel_layers = run_key
-        lo = run_tiles[0] * bank_tile
-        hi = (run_tiles[-1] + 1) * bank_tile
-        sel = (
-            packed_p[lo:hi][:, list(sel_layers), :]
-            if sel_layers
-            else packed_p[lo:hi, :0, :]
-        )
-        groups.append(
-            TileGroup(
-                schedule=schedule,
-                tail_shift=tail_shift,
-                sel_layers=sel_layers,
-                packed=np.ascontiguousarray(sel),
-                n_filters=min(hi, n_filters) - min(lo, n_filters),
-            )
-        )
-
-    for ti in range(n_tiles):
-        union = occ_p[ti * bank_tile : (ti + 1) * bank_tile].any(axis=0)
-        key = superlayer_schedule(tuple(np.nonzero(union)[0]), merge)
-        if key != run_key:
-            close_run()
-            run_tiles = []
-            run_key = key
-        run_tiles.append(ti)
-    close_run()
-    return BankSchedule(
-        tile_size=bank_tile,
-        merge=merge,
-        perm=perm,
-        inv=inv,
-        groups=tuple(groups),
-        n_filters=n_filters,
-    )
-
-
 def pulses_from_packed(packed_row: np.ndarray, taps: int):
     """(n_layers, n_words) packed trits → MSB-first static pulse tuple
     (the `specialized_program` input) — the small-bank fast path's bridge
@@ -619,23 +429,21 @@ def blmac_fir_dynamic(
 ) -> jnp.ndarray:
     """Single-filter runtime-trit entry point: a B=1 scheduled bank call.
 
-    The trits stay a runtime operand — the compile cache is keyed on the
-    filter's layer-OCCUPANCY schedule, not its pulse list, so streaming
-    many distinct filters through this path re-traces only when the set
-    of populated layers changes (dense same-width filters share one
-    program).  Use `blmac_fir_bank`'s fast path / `blmac_fir_specialized`
-    when per-filter compilation is acceptable.  Accumulator width: int32,
-    guaranteed by the pack-time `assert_int32_bound` for 16-bit coeffs ×
-    8-bit samples at ≤255 taps (§2.1) — the same single check
-    `FilterBankEngine` relies on.
+    The trits stay a runtime operand — the kernel compile cache is keyed
+    on the filter's layer-OCCUPANCY schedule, not its pulse list, so
+    streaming many distinct filters through this path re-traces only when
+    the set of populated layers changes (dense same-width filters share
+    one program).  Use `blmac_fir_bank`'s fast path /
+    `blmac_fir_specialized` when per-filter compilation is acceptable.
+    The trits are wrapped as a content-addressed `BlmacProgram`
+    (`repro.compiler.compile_packed`), which asserts the §2.1 int32
+    accumulator bound and memoizes the B=1 superlayer schedule.
     """
     trits = np.asarray(trits)
     half = taps // 2
-    w_half = csd_decode(trits[:n_layers, : half + 1].T)  # (M,) int64
-    assert_int32_bound(
-        np.concatenate([w_half, w_half[:-1][::-1]]), 8, "blmac_fir_dynamic"
-    )
     packed = pack_trits(trits[None, :n_layers, : half + 1])  # (1, L, W)
+    prog = compile_packed(packed, taps)  # decodes weights, asserts §2.1
     return blmac_fir_bank(
-        x, packed, taps, tile, bank_tile=1, interpret=interpret, fast_path=False
+        x, prog.packed, taps, tile, interpret=interpret,
+        fast_path=False, schedule=prog.schedule(bank_tile=1),
     )[0]

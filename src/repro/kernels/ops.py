@@ -12,12 +12,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
+from ..compiler import compile_bank
+from ..core.csd import require_type1
 from .blmac_fir import (
+    FAST_PATH_MAX,
+    MERGE_DEFAULT,
     blmac_fir_bank as _bank_kernel,
-    blmac_fir_dynamic,
     blmac_fir_specialized,
-    pack_bank_trits,
-    pulses_msb_first,
 )
 from .blmac_matmul import (
     GROUP,
@@ -26,7 +27,6 @@ from .blmac_matmul import (
     pulse_quantize,
 )
 from .runtime import default_interpret, resolve_interpret
-from ..core.csd import csd_digits, require_type1
 
 __all__ = [
     "blmac_fir",
@@ -50,18 +50,23 @@ def blmac_fir(
     ``qcoeffs`` is host-side (static) int data — reprogramming the filter
     recompiles, exactly as the FPGA machine reloads its weight memory
     (`specialize=True` hits the LRU program cache; `specialize=False`
-    ships packed trits as a runtime operand instead).
+    ships packed trits as a runtime operand instead).  Both routes read a
+    content-addressed `repro.compiler.BlmacProgram` — the pulse schedule
+    and packed trits are derived once per distinct filter.
     Returns int32 (len(x) - taps + 1,).
     """
     qcoeffs = np.asarray(qcoeffs, np.int64)
     taps = require_type1(qcoeffs, "blmac_fir")
     interpret = resolve_interpret(interpret)
+    prog = compile_bank(qcoeffs[None, :])
     if specialize:
-        pulses = pulses_msb_first(qcoeffs)
-        return blmac_fir_specialized(x, pulses, taps, tile, interpret)
-    half = taps // 2 + 1
-    digits = csd_digits(qcoeffs[:half], n_digits=17)  # (M, L)
-    return blmac_fir_dynamic(x, digits.T, taps, digits.shape[1], tile, interpret)
+        return blmac_fir_specialized(
+            x, prog.pulse_schedules()[0], taps, tile, interpret
+        )
+    return _bank_kernel(
+        x, prog.packed, taps, tile, interpret=interpret,
+        fast_path=False, schedule=prog.schedule(bank_tile=1),
+    )[0]
 
 
 def blmac_fir_bank(
@@ -76,19 +81,25 @@ def blmac_fir_bank(
     the sparsity-scheduled bank kernel — packed-trit operands, filters
     grouped into occupancy-homogeneous bank tiles, one integer matmul per
     populated *superlayer* (``merge`` adjacent CSD layers; see
-    `repro.kernels.blmac_fir.plan_bank_schedule`), window matrix
-    amortized over the bank tile.  B=1 dispatches to the pulse-
-    specialized fast path.
+    `repro.compiler.plan_bank_schedule`), window matrix amortized over
+    the bank tile.  B=1 dispatches to the pulse-specialized fast path.
+
+    The bank is compiled once (`repro.compiler.compile_bank`, content-
+    addressed) and its memoized superlayer schedule reused, so repeated
+    calls — and other clients of the same bank, like `FilterBankEngine`
+    — share one artifact.
 
     Returns int32 (B, C, T - taps + 1), or (B, T - taps + 1) for 1-D ``x``.
     """
-    from .blmac_fir import MERGE_DEFAULT
-
-    packed = pack_bank_trits(qbank)
-    taps = int(np.asarray(qbank).shape[-1])
+    prog = compile_bank(qbank)
+    if prog.n_filters <= FAST_PATH_MAX:
+        return _bank_kernel(
+            x, prog.packed, prog.taps, tile, bank_tile, interpret,
+            merge=MERGE_DEFAULT if merge is None else merge,
+        )
     return _bank_kernel(
-        x, packed, taps, tile, bank_tile, interpret,
-        merge=MERGE_DEFAULT if merge is None else merge,
+        x, prog.packed, prog.taps, tile, interpret=interpret,
+        fast_path=False, schedule=prog.schedule(bank_tile, merge),
     )
 
 

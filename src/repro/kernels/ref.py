@@ -16,8 +16,13 @@ def blmac_fir_ref(x: jnp.ndarray, qcoeffs: np.ndarray) -> jnp.ndarray:
     ``x``: (T,) integer samples; ``qcoeffs``: (taps,) host-side int64
     quantized symmetric coefficients (static).  Returns (T - taps + 1,)
     int32 — identical to ``filters.apply.fir_bit_layers``.
+
+    The CSD digits are read off the content-addressed compiled program
+    (`repro.compiler.compile_bank`) — the same artifact the kernels
+    execute — so this oracle cannot drift from the bank semantics; only
+    the jnp Horner recursion below is independent.
     """
-    from ..core.csd import csd_digits
+    from ..compiler import compile_bank
 
     taps = qcoeffs.shape[0]
     half = taps // 2
@@ -29,7 +34,8 @@ def blmac_fir_ref(x: jnp.ndarray, qcoeffs: np.ndarray) -> jnp.ndarray:
         for j in range(half)
     ]
     folded.append(x[half : half + n_out])
-    digits = csd_digits(np.asarray(qcoeffs[: half + 1]))  # static (M, L)
+    prog = compile_bank(np.asarray(qcoeffs, np.int64)[None, :])
+    digits = prog.half_digits()[0]  # static (M, L)
     acc = jnp.zeros((n_out,), jnp.int32)
     for layer in range(digits.shape[1] - 1, -1, -1):
         acc = acc << 1

@@ -10,9 +10,14 @@ bit-exact validation mode the tests rely on.
 small candidate grid of ``(mode, tile, bank_tile, merge)`` configurations
 through the cost model in `repro.core.costmodel` (constants fitted on the
 reference machine) and returns the winner together with its compiled
-`BankSchedule`.  LRU-cached on a content digest of the packed bank,
-exactly like `specialized_program` caches pulse schedules — re-dispatching
-a bank that was seen before costs a hash plus a dict hit.
+`BankSchedule`.  Since the one-program refactor both autotuners are thin
+clients of `repro.compiler`: the bank argument may be a `BlmacProgram`
+(preferred — the engines pass theirs) or a raw packed operand (wrapped
+via `compile_packed`), every candidate schedule comes from the program's
+memoized `schedule()` and every cost estimate from its
+``predict_*_us`` readers — nothing here re-derives CSD, occupancy or
+trit statistics.  The dispatch cache keys on the program's content
+digest; hits/misses are reported by `repro.compiler.cache_stats()`.
 
 Lives in its own leaf module so both ``ops.py`` (the public entry points)
 and the kernel modules it imports can share it without a cycle (the
@@ -21,10 +26,11 @@ planner imports ``blmac_fir`` lazily for the same reason).
 from __future__ import annotations
 
 import collections
-import hashlib
 
 import jax
 import numpy as np
+
+from ..compiler.cache import STATS as _COMPILER_STATS
 
 __all__ = [
     "default_interpret",
@@ -64,15 +70,28 @@ def resolve_interpret(interpret: bool | None) -> bool:
     return default_interpret() if interpret is None else bool(interpret)
 
 
+def _resolve_program(bank, taps):
+    """Accept a `BlmacProgram` (preferred) or a packed operand + taps."""
+    from ..compiler import BlmacProgram, compile_packed
+
+    if isinstance(bank, BlmacProgram):
+        if taps is not None and int(taps) != bank.taps:
+            raise ValueError(f"program is {bank.taps}-tap, got taps={taps}")
+        return bank
+    if taps is None:
+        raise ValueError("taps is required with a packed-operand bank")
+    return compile_packed(np.ascontiguousarray(bank), int(taps))
+
+
 def autotune_bank_dispatch(
-    packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
-    taps: int,
+    bank,  # BlmacProgram, or (B, n_layers, n_words) uint32 packed operand
+    taps: int | None = None,
     channels: int = 1,
     tile: int | None = None,
     chunk_hint: int = 2048,
     interpret: bool | None = None,
 ):
-    """Pick ``(mode, tile, bank_tile, merge)`` for a packed bank.
+    """Pick ``(mode, tile, bank_tile, merge)`` for a compiled bank.
 
     Evaluates the cost model over the candidate grid — the specialized
     per-filter loop (narrow banks only, see `SPECIALIZE_BANK_MAX`) versus
@@ -81,23 +100,26 @@ def autotune_bank_dispatch(
     `repro.core.costmodel.BankDispatchPlan` plus, for scheduled mode, the
     `BankSchedule` it was costed with (so callers never re-plan).
 
-    ``chunk_hint`` is the expected samples per dispatch, the autotuner's
-    amortization knob (streaming engines push small chunks → dispatch
-    overhead matters more; one-shot batch jobs amortize it).  ``tile``
-    defaults to the measured per-mode lookup (see `_default_tile`).
+    ``bank`` is a `repro.compiler.BlmacProgram` or a raw `pack_bank_trits`
+    operand (then ``taps`` is required; the operand is wrapped content-
+    addressed via `compile_packed`).  Candidate schedules come from the
+    program's memo, so an engine autotuning then serving the same bank
+    plans each geometry once.  ``chunk_hint`` is the expected samples per
+    dispatch, the autotuner's amortization knob (streaming engines push
+    small chunks → dispatch overhead matters more; one-shot batch jobs
+    amortize it).  ``tile`` defaults to the measured per-mode lookup
+    (see `_default_tile`).
     """
-    packed = np.ascontiguousarray(packed)
-    # key on a content digest, not the bytes themselves: hashing reads the
-    # buffer in place (no copy) and the cache retains 32 bytes per bank
-    # instead of pinning whole packed banks for the process lifetime
+    program = _resolve_program(bank, taps)
     key = (
-        hashlib.sha256(packed).digest(), packed.shape, taps, channels,
-        tile, chunk_hint, resolve_interpret(interpret),
+        program.key, channels, tile, chunk_hint, resolve_interpret(interpret),
     )
     if key in _AUTOTUNE_CACHE:
         _AUTOTUNE_CACHE.move_to_end(key)
+        _COMPILER_STATS["autotune"].hit()
         return _AUTOTUNE_CACHE[key]
-    result = _autotune(packed, taps, channels, tile, chunk_hint)
+    _COMPILER_STATS["autotune"].miss()
+    result = _autotune(program, channels, tile, chunk_hint)
     _AUTOTUNE_CACHE[key] = result
     while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
         _AUTOTUNE_CACHE.popitem(last=False)
@@ -108,45 +130,30 @@ _AUTOTUNE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _AUTOTUNE_CACHE_MAX = 16  # schedules hold compacted bank copies: keep few
 
 
-def _autotune(packed, taps, channels, tile, chunk_hint,
-              allow_specialized=True):
-    from ..core.costmodel import (BankDispatchPlan, predict_scheduled_us,
-                                  predict_specialized_us)
-    from ..core.csd import unpack_trits
-    from .blmac_fir import TRITS_PER_WORD, default_bank_tile, plan_bank_schedule
+def _autotune(program, channels, tile, chunk_hint, allow_specialized=True):
+    from ..compiler import default_bank_tile
+    from ..core.costmodel import BankDispatchPlan
 
-    n_filters, n_layers, n_words = packed.shape
-    m_pad = n_words * TRITS_PER_WORD
+    n_filters = program.n_filters
 
     def n_tiles(t):
         return max(1, -(-chunk_hint // t))
 
     best = None  # (plan, schedule)
     if allow_specialized and n_filters <= SPECIALIZE_BANK_MAX:
-        trits = unpack_trits(packed, m_pad)  # (B, L, m_pad)
-        mean_pulses = float(np.count_nonzero(trits) / max(n_filters, 1))
         t = tile or _default_tile("specialized", 1)
-        us = predict_specialized_us(
-            n_filters, channels, n_tiles(t), taps, mean_pulses, n_layers
-        )
+        us = program.predict_specialized_us(channels, n_tiles(t))
         best = (BankDispatchPlan("specialized", t, 1, 1, us), None)
     bank_tiles = {default_bank_tile(n_filters)}
     if n_filters > 8:
         bank_tiles.add(min(default_bank_tile(n_filters), 32))
     for bt in sorted(bank_tiles):
         for merge in MERGE_CANDIDATES:
-            schedule = plan_bank_schedule(packed, bt, merge)
-            groups = [
-                (
-                    g.packed.shape[0] // bt,
-                    bt,
-                    len(g.schedule),
-                    len(g.sel_layers),
-                )
-                for g in schedule.groups
-            ]
+            schedule = program.schedule(bt, merge)
             t = tile or _default_tile("scheduled", bt)
-            us = predict_scheduled_us(channels, n_tiles(t), t, m_pad, groups)
+            us = program.predict_scheduled_us(
+                channels, n_tiles(t), t, bt, merge
+            )
             plan = BankDispatchPlan("scheduled", t, bt, merge, us)
             if best is None or us < best[0].predicted_us:
                 best = (plan, schedule)
@@ -159,8 +166,8 @@ def _autotune(packed, taps, channels, tile, chunk_hint,
 
 
 def autotune_sharded_dispatch(
-    packed: np.ndarray,  # (B, n_layers, n_words) uint32 from pack_bank_trits
-    taps: int,
+    bank,  # BlmacProgram, or (B, n_layers, n_words) uint32 packed operand
+    taps: int | None = None,
     channels: int = 1,
     mesh_shape: "tuple[int, int]" = (1, 1),
     tile: int | None = None,
@@ -184,24 +191,30 @@ def autotune_sharded_dispatch(
     Returns ``(plan, partition, schedules)``: the winning
     `ShardedBankPlan`, its `BankPartition`, and one `BankSchedule` (or
     ``None`` for specialized shards) per bank shard, so callers never
-    re-plan.  LRU-cached on a content digest like `autotune_bank_dispatch`.
-    ``force_shards`` pins the bank-shard count (the sweep collapses to
-    that single candidate — mode/tile per shard are still autotuned);
-    ``force_data`` pins the data-axis usage to ``"none"``, ``"channels"``
-    or ``"time"`` instead of letting the sweep decline the axis.
+    re-plan.  ``bank`` is a `BlmacProgram` or a raw packed operand (then
+    ``taps`` is required); per-shard candidates are the program's
+    memoized `select()` subprograms — the exact objects the sharded
+    engine then executes, so autotuning and serving share one compiled
+    artifact per shard.  LRU-cached on the program digest like
+    `autotune_bank_dispatch`.  ``force_shards`` pins the bank-shard count
+    (the sweep collapses to that single candidate — mode/tile per shard
+    are still autotuned); ``force_data`` pins the data-axis usage to
+    ``"none"``, ``"channels"`` or ``"time"`` instead of letting the
+    sweep decline the axis.
     """
-    packed = np.ascontiguousarray(packed)
+    program = _resolve_program(bank, taps)
     n_bank, n_data = int(mesh_shape[0]), int(mesh_shape[1])
     key = (
-        "sharded", hashlib.sha256(packed).digest(), packed.shape, taps,
-        channels, n_bank, n_data, tile, chunk_hint,
+        "sharded", program.key, channels, n_bank, n_data, tile, chunk_hint,
         resolve_interpret(interpret), force_shards, force_data,
     )
     if key in _AUTOTUNE_CACHE:
         _AUTOTUNE_CACHE.move_to_end(key)
+        _COMPILER_STATS["autotune"].hit()
         return _AUTOTUNE_CACHE[key]
+    _COMPILER_STATS["autotune"].miss()
     result = _autotune_sharded(
-        packed, taps, channels, n_bank, n_data, tile, chunk_hint,
+        program, channels, n_bank, n_data, tile, chunk_hint,
         force_shards, force_data,
     )
     _AUTOTUNE_CACHE[key] = result
@@ -222,13 +235,13 @@ def _shard_candidates(n_bank: int, n_filters: int) -> "list[int]":
     return sorted({min(c, n_filters) for c in cands})
 
 
-def _autotune_sharded(packed, taps, channels, n_bank, n_data, tile,
+def _autotune_sharded(program, channels, n_bank, n_data, tile,
                       chunk_hint, force_shards=None, force_data=None):
     from ..core.costmodel import (PALLAS_CALL_US, SPEC_CALL_US,
                                   ShardedBankPlan, predict_sharded_us)
-    from ..distributed.sharding import partition_bank
 
-    n_filters = packed.shape[0]
+    taps = program.taps
+    n_filters = program.n_filters
     # data-axis candidates: using the axis (channels when divisible, else
     # time chunks with a halo exchange) AND leaving it idle — the sweep
     # may decline EITHER mesh axis; the engine degrades per-shard to a
@@ -259,7 +272,7 @@ def _autotune_sharded(packed, taps, channels, n_bank, n_data, tile,
     best = None  # (ShardedBankPlan, partition, schedules)
     for nd, data_mode, chan_local, chunk_local in data_cands:
         for n_shards in candidates:
-            part = partition_bank(packed, n_shards, taps)
+            part = program.partition(n_shards)
             # two mode policies per shard count: each shard's free pick,
             # and all-scheduled — the per-shard optimum is chosen in
             # isolation, but specialized shards pay one HOST dispatch
@@ -272,9 +285,9 @@ def _autotune_sharded(packed, taps, channels, n_bank, n_data, tile,
             for allow_spec in policies:
                 plans, schedules, costs, host = [], [], [], []
                 for rows in part.assign:
-                    sub = np.ascontiguousarray(packed[rows])
+                    sub = program.select(rows)  # memoized shard subprogram
                     plan, schedule = _autotune(
-                        sub, taps, chan_local, tile, chunk_local,
+                        sub, chan_local, tile, chunk_local,
                         allow_specialized=allow_spec,
                     )
                     plans.append(plan)

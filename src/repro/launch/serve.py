@@ -17,7 +17,10 @@ device and double-buffered through `repro.serving.AsyncBankServer`)::
         --taps 63 --channels 1 --chunk 4096 --chunks 32
 
 Run it under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` to
-exercise the mesh path on a CPU host.
+exercise the mesh path on a CPU host.  ``--program-path bank.npz``
+round-trips the compiled `repro.compiler.BlmacProgram` through disk:
+the first run compiles and saves, every later run warm-starts from the
+file (no re-quantization, CSD encoding or trit packing at startup).
 """
 from __future__ import annotations
 
@@ -26,16 +29,38 @@ import time
 
 
 def serve_fir_bank(args) -> None:
+    import os
     import numpy as np
 
+    from repro.compiler import BlmacProgram, ProgramFormatError, compile_bank
     from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
                                spread_lowpass_qbank)
     from repro.serving import AsyncBankServer
 
     n = args.fir_bank
     qbank = spread_lowpass_qbank(n, args.taps)
+    # warm-start: load the compiled program if a previous serving process
+    # saved one for this bank; otherwise compile once and save it
+    program = None
+    if args.program_path and os.path.exists(args.program_path):
+        try:
+            cand = BlmacProgram.load(args.program_path)
+            if np.array_equal(cand.qbank, qbank):
+                program = cand
+                print(f"[serve] warm-start: loaded compiled program "
+                      f"{program.key[:12]}… from {args.program_path}")
+            else:
+                print(f"[serve] {args.program_path} is for a different "
+                      f"bank; recompiling")
+        except ProgramFormatError as e:
+            print(f"[serve] ignoring stale program file: {e}")
+    if program is None:
+        program = compile_bank(qbank)
+        if args.program_path:
+            program.save(args.program_path)
+            print(f"[serve] saved compiled program to {args.program_path}")
     engine = ShardedFilterBankEngine(
-        qbank, channels=args.channels, chunk_hint=args.chunk
+        program, channels=args.channels, chunk_hint=args.chunk
     )
     print(f"[serve] {engine.describe()}")
     server = AsyncBankServer(engine, depth=args.depth)
@@ -83,6 +108,9 @@ def main() -> None:
     ap.add_argument("--chunks", type=int, default=32)
     ap.add_argument("--depth", type=int, default=2,
                     help="async double-buffer depth (fir-bank mode)")
+    ap.add_argument("--program-path", default="",
+                    help="compiled-program cache file (fir-bank mode): "
+                         "load it to warm-start, write it after compiling")
     args = ap.parse_args()
 
     if args.fir_bank:

@@ -178,6 +178,13 @@ class AsyncBankServer:
         self.chunks_in = 0
         self.chunks_out = 0
 
+    @property
+    def program(self):
+        """The engine's compiled `repro.compiler.BlmacProgram` (None for
+        engines that predate the compile pipeline) — `save()` it so the
+        next serving process warm-starts without recompiling."""
+        return getattr(self.engine, "program", None)
+
     def submit(self, chunk) -> list:
         """Dispatch one chunk; returns the list of chunk outputs that
         RESOLVED to make room (possibly empty, never more than one under

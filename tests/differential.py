@@ -1,8 +1,9 @@
 """Five-way differential verification harness.
 
-One bank, one signal, five independent implementations of the BLMAC dot
-product — proven bit-exact against *each other*, not just individually
-plausible:
+One bank, one signal, ONE compiled program (`repro.compiler.BlmacProgram`
+— shared by every leg since the one-program refactor), five independent
+implementations of the BLMAC dot product — proven bit-exact against
+*each other*, not just individually plausible:
 
   1. **oracle**   — `repro.filters.fir_bit_layers_batch` (numpy, Eq. 2),
   2. **kernel**   — `repro.kernels.blmac_fir_bank` (Pallas, packed trits,
@@ -43,12 +44,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.compiler import BlmacProgram, compile_bank, lower
 from repro.core import (FirBlmacMachine, FirBlmacVMachine, MachineSpec,
                         machine_cycles_batch, po2_quantize_batch)
 from repro.core.machine import MachineResult
-from repro.filters import (FilterBankEngine, fir_bit_layers_batch, sweep_bank,
-                           sweep_specs)
-from repro.kernels import blmac_fir_bank
+from repro.filters import FilterBankEngine, sweep_bank, sweep_specs
 
 __all__ = [
     "DifferentialReport",
@@ -153,10 +153,11 @@ class DifferentialReport:
 
 
 def five_way_check(
-    qbank: np.ndarray,
+    qbank: np.ndarray | None = None,
     x: np.ndarray | None = None,
     spec: MachineSpec | None = None,
     *,
+    program: BlmacProgram | None = None,
     n_out: int = 48,
     tile: int = 256,
     scalar_samples: int = 4,
@@ -167,6 +168,14 @@ def five_way_check(
 ) -> DifferentialReport:
     """Assert all five implementations agree on ``qbank``; see module doc.
 
+    The bank is compiled ONCE (`repro.compiler.compile_bank`) and every
+    leg consumes that single `BlmacProgram` — the oracle, kernel and
+    sharded legs through `repro.compiler.lower`, the engines by being
+    constructed from it, the machines by reading its quantized
+    coefficients.  Pass a prebuilt ``program`` (e.g. one that survived a
+    `save()`/`load()` round-trip) to pin the shared artifact explicitly;
+    ``qbank`` may then be omitted.
+
     ``x`` defaults to a seeded random signal producing ``n_out`` outputs
     within the spec's sample range.  Raises AssertionError with the leg
     name on any divergence.  ``mesh`` pins the sharded leg's device mesh
@@ -174,7 +183,15 @@ def five_way_check(
     single-device session, where the leg still exercises the partition,
     per-shard planning and reassembly plumbing end-to-end).
     """
-    qbank = np.atleast_2d(np.asarray(qbank, np.int64))
+    if program is None:
+        if qbank is None:
+            raise ValueError("five_way_check needs qbank or program")
+        program = compile_bank(np.atleast_2d(np.asarray(qbank, np.int64)))
+    elif qbank is not None:
+        assert np.array_equal(
+            np.atleast_2d(np.asarray(qbank, np.int64)), program.qbank
+        ), "qbank/program mismatch"
+    qbank = program.qbank
     n_filters, taps = qbank.shape
     if spec is None:
         spec = MachineSpec(taps=taps)
@@ -187,7 +204,9 @@ def five_way_check(
     n_out = x.size - taps + 1
 
     # -- leg 1: numpy oracle -------------------------------------------------
-    oracle = fir_bit_layers_batch(x, qbank)[:, 0, :]  # (B, n_out)
+    # lower(..., "oracle") reads ONLY program.qbank and runs the naive
+    # dense Eq. 2 loop — independent of the schedule machinery under test
+    oracle = lower(program, "oracle")(x)[:, 0, :]  # (B, n_out)
 
     # -- leg 4: vectorized machine (under test) ------------------------------
     vm = FirBlmacVMachine(spec)
@@ -199,14 +218,12 @@ def five_way_check(
     )
     assert np.array_equal(vres.cycles, np.broadcast_to(cm[:, None], vres.cycles.shape)), \
         "vmachine cycles != static cost model"
+    assert np.array_equal(program.machine_cycles(spec), cm), \
+        "program cycle prediction != static cost model"
 
     # -- leg 2: Pallas bank kernel -------------------------------------------
-    import jax.numpy as jnp
-
-    y = blmac_fir_bank(
-        jnp.asarray(x, jnp.int32), qbank, tile=tile, interpret=interpret
-    )  # 1-D signal → squeezed (B, n_out)
-    assert np.array_equal(np.asarray(y, np.int64), oracle), \
+    y = lower(program, "scheduled", tile=tile, interpret=interpret)(x)
+    assert np.array_equal(np.asarray(y[:, 0, :], np.int64), oracle), \
         "pallas bank kernel != oracle"
 
     # -- leg 2b: streaming engine through the scheduled bank path ------------
@@ -214,8 +231,9 @@ def five_way_check(
     # restoration — everything the one-shot wrapper also uses, plus the
     # device-resident operands and the overlap-save framing)
     eng = FilterBankEngine(
-        qbank, channels=1, tile=tile, mode="packed", interpret=interpret
+        program, channels=1, tile=tile, mode="packed", interpret=interpret
     )
+    assert eng.program is program, "engine did not adopt the shared program"
     y_eng = eng.push(x)[:, 0, :]
     assert np.array_equal(np.asarray(y_eng, np.int64), oracle), \
         "scheduled FilterBankEngine != oracle"
@@ -226,11 +244,10 @@ def five_way_check(
     # occupancy-balanced partition, per-shard autotuned programs, halo
     # exchange when the mesh carries a data axis, and the gather-free
     # caller-order reassembly — checked on whatever mesh the session has
-    from repro.filters import ShardedFilterBankEngine
-
-    seng = ShardedFilterBankEngine(qbank, channels=1, mesh=mesh,
-                                   interpret=interpret)
-    y_sh = seng.push(x)[:, 0, :]
+    sharded = lower(program, "sharded", mesh=mesh, interpret=interpret)
+    seng = sharded.engine
+    assert seng.program is program, "sharded engine did not adopt the program"
+    y_sh = sharded(x)[:, 0, :]
     assert np.array_equal(np.asarray(y_sh, np.int64), oracle), (
         f"sharded engine != oracle (mesh "
         f"{seng.n_bank_shards}x{seng.n_data}, data={seng.data_mode})"
