@@ -27,7 +27,10 @@ Public surface:
   * `plan_bank_schedule` / `BankSchedule` / `superlayer_schedule` — the
     pack-time scheduler (moved here from ``kernels/blmac_fir.py``),
   * `cache_stats` / `clear_caches` — one observability point for every
-    compile-pipeline cache.
+    compile-pipeline cache,
+  * `TailSnapshot` — overlap-save stream state frozen as an artifact,
+    content-addressed to its program (the replay point behind the
+    sharded engine's bit-exact fault recovery).
 
 `repro.filters.FilterBankEngine`, `ShardedFilterBankEngine`,
 `repro.serving.AsyncBankServer` and both autotuners are thin clients of
@@ -41,6 +44,7 @@ from .program import (BlmacProgram, CompileSpec, PROGRAM_FORMAT_VERSION,
 from .schedule import (BankSchedule, MERGE_DEFAULT, TileGroup,
                        default_bank_tile, plan_bank_schedule,
                        superlayer_schedule)
+from .state import STATE_FORMAT_VERSION, SnapshotFormatError, TailSnapshot
 
 __all__ = [
     "BACKENDS",
@@ -51,6 +55,9 @@ __all__ = [
     "MERGE_DEFAULT",
     "PROGRAM_FORMAT_VERSION",
     "ProgramFormatError",
+    "STATE_FORMAT_VERSION",
+    "SnapshotFormatError",
+    "TailSnapshot",
     "TileGroup",
     "cache_stats",
     "clear_caches",

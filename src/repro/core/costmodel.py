@@ -28,6 +28,7 @@ __all__ = [
     "predict_specialized_us",
     "predict_scheduled_us",
     "predict_sharded_us",
+    "predict_recovery_us",
 ]
 
 
@@ -233,6 +234,44 @@ def predict_sharded_us(
     if data_mode == "time" and n_data > 1:
         us += HALO_EXCHANGE_US * n_data
     return us
+
+
+# ---------------------------------------------------------------------------
+# recovery cost model (fault-tolerant re-partition target choice)
+# ---------------------------------------------------------------------------
+#
+# When `ShardedFilterBankEngine` loses a shard it must pick the shard
+# count of the re-partitioned survivor mesh.  The choice trades a
+# ONE-TIME bill (compiling the candidate's per-shard schedules, and
+# replaying the in-flight chunks through the new mesh) against the
+# candidate's STEADY-STATE per-push latency over however long the
+# recovered mesh is expected to serve.  The constants are coarse, in
+# the same fitted-on-the-reference-container spirit as the dispatch
+# constants above: they only need to rank candidates (e.g. "7 fresh
+# shard schedules + slightly better steady state" vs "4 likely-memoized
+# shards"), not predict wall time.
+
+RECOVERY_REPLAN_US = 2500.0  # per fresh shard subprogram: select + schedule
+REPLAY_US_PER_SAMPLE = 0.5  # per in-flight output sample replayed
+RECOVERY_HORIZON_PUSHES = 50.0  # pushes the recovered mesh amortizes over
+
+
+def predict_recovery_us(
+    steady_us: float,
+    n_replanned_shards: int,
+    replay_samples: int,
+) -> float:
+    """Modelled total cost of adopting one recovery target: the re-plan
+    bill for its ``n_replanned_shards`` shard schedules, the replay of
+    ``replay_samples`` in-flight output samples, and its steady-state
+    per-push latency (``steady_us``, from `predict_sharded_us`) over
+    the amortization horizon.  Lower is better; used by
+    `ShardedFilterBankEngine` to choose the re-partition shard count."""
+    return (
+        n_replanned_shards * RECOVERY_REPLAN_US
+        + replay_samples * REPLAY_US_PER_SAMPLE
+        + RECOVERY_HORIZON_PUSHES * float(steady_us)
+    )
 
 
 def machine_cycles_batch(

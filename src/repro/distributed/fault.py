@@ -1,44 +1,36 @@
-"""Fault tolerance: the production train loop.
+"""Fault-tolerant TRAIN loop: checkpoint/resume + watchdog, as a client
+of the shared fault machinery in `repro.distributed.faultbank`.
+
+This module is the train-side face of fault tolerance only:
 
   * atomic keep-k checkpoints every `ckpt_every` steps,
   * auto-resume from the latest committed checkpoint,
   * deterministic data replay (the pipeline is a pure function of step),
-  * straggler watchdog: per-step wall times vs a running median; slow
-    steps are counted and reported (on a real fleet this feeds the
-    preemption/rescheduling controller — here it is observability),
+  * straggler watchdog: per-step wall times vs a running median
+    (`faultbank.StragglerStats`); slow steps are counted and reported
+    (on a real fleet this feeds the preemption/rescheduling controller
+    — here it is observability),
   * failure injection for tests (`fail_at`), proving crash → restart →
     bit-exact convergence with the uninterrupted run.
+
+The SERVING-side fault tolerance — shard-loss detection, re-partition
+recovery and chaos injection for the sharded filter-bank mesh — lives
+in `faultbank` (shared taxonomy/watchdog/injector) and
+`repro.filters.ShardedFilterBankEngine` / `repro.serving.AsyncBankServer`
+(the recovery and retry paths).  `StragglerStats` and `SimulatedFailure`
+moved to `faultbank` and are re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 import jax
-import numpy as np
 
 from ..checkpoint.manager import latest_step, restore_checkpoint, save_checkpoint
 from ..data.pipeline import TokenPipeline
 from ..training.train_step import TrainHParams, make_train_step, train_state_init
+from .faultbank import SimulatedFailure, StragglerStats
 
-
-class SimulatedFailure(RuntimeError):
-    pass
-
-
-@dataclasses.dataclass
-class StragglerStats:
-    times: list[float] = dataclasses.field(default_factory=list)
-    slow_steps: int = 0
-    factor: float = 2.0
-
-    def record(self, dt: float) -> bool:
-        self.times.append(dt)
-        if len(self.times) >= 5:
-            med = float(np.median(self.times[-50:]))
-            if dt > self.factor * med:
-                self.slow_steps += 1
-                return True
-        return False
+__all__ = ["SimulatedFailure", "StragglerStats", "TrainLoop"]
 
 
 class TrainLoop:

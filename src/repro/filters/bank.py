@@ -230,6 +230,40 @@ class FilterBankEngine:
         """Samples buffered but not yet old enough to finish a window."""
         return self._tail.shape[1]
 
+    # -- tail snapshot / restore (content-addressed stream state) -----------
+
+    def snapshot_tail(self):
+        """Freeze the overlap-save stream state as a
+        `repro.compiler.TailSnapshot` keyed to this engine's program
+        digest — `save()`-able next to `BlmacProgram.save()` so a
+        restarted serving process resumes the stream bit-exactly, and
+        the replay point the sharded engine's fault recovery builds on."""
+        from ..compiler.state import TailSnapshot
+
+        return TailSnapshot(
+            program_key=self.program.key, channels=self.channels,
+            samples_in=self.samples_in, samples_out=self.samples_out,
+            tail=self._tail.copy(),
+        )
+
+    def restore_tail(self, snapshot) -> None:
+        """Adopt a `TailSnapshot` captured on THIS program (validated by
+        content key — restoring another bank's stream is a loud error,
+        never a silently wrong output)."""
+        if snapshot.program_key != self.program.key:
+            raise ValueError(
+                f"snapshot belongs to program {snapshot.program_key[:12]}…, "
+                f"this engine runs {self.program.key[:12]}…"
+            )
+        if int(snapshot.channels) != self.channels:
+            raise ValueError(
+                f"snapshot has {snapshot.channels} channels, "
+                f"engine has {self.channels}"
+            )
+        self._tail = np.asarray(snapshot.tail, np.int32).copy()
+        self.samples_in = int(snapshot.samples_in)
+        self.samples_out = int(snapshot.samples_out)
+
     # -- one-shot application ----------------------------------------------
 
     def _apply(self, buf: np.ndarray) -> np.ndarray:

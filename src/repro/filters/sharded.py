@@ -27,11 +27,31 @@ devices, the host reads each shard's block, and ONE precomputed index
 permutation (`BankPartition.inv`) restores the caller's filter order —
 no cross-device collective touches the results.
 
+**Fault tolerance** (see `repro.distributed.faultbank` for the shared
+taxonomy/injector/watchdog): every `push_async` captures a
+`repro.compiler.TailSnapshot` — the pure-host overlap-save state that
+makes the chunk deterministically replayable on ANY backend of the same
+program.  When a shard is detected dead (a raised `ShardLost`, or the
+`ShardHealth` watchdog timeout), the engine removes that mesh row,
+re-partitions the bank over the survivors via the program's memoized
+`partition`/`select` slices (recovery shard count chosen by
+`repro.core.costmodel.predict_recovery_us`), and replays every
+in-flight chunk from its snapshot — so the resumed stream is bit-exact
+with an uninterrupted run.  When the mesh degrades to a single device
+the engine falls back to the plain `FilterBankEngine` lowering of the
+SAME `BlmacProgram`.  Corrupted shard blocks (caught by the optional
+boundary integrity probe) are replayed in place and escalate to loss if
+they persist; transient errors re-arm the chunk and propagate for
+`repro.serving.AsyncBankServer`'s bounded retry/backoff.  Counters for
+all of it surface through ``fault_stats()``.
+
 Bit-exactness: every mesh shape agrees with
 `repro.filters.fir_bit_layers_batch` to the last bit on integer inputs
-(the fifth leg of `tests/differential.py`).
+(the fifth leg of `tests/differential.py`, including its chaos grid).
 """
 from __future__ import annotations
+
+import time
 
 import numpy as np
 import jax
@@ -40,46 +60,113 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.collectives import (get_shard_map, halo_exchange_left,
                                        shard_map_no_check_kwargs)
-from ..distributed.sharding import DATA_AXIS, bank_mesh, mesh_bank_shape
+from ..distributed.faultbank import (FaultStats, PendingInvalidated,
+                                     ShardCorruption, ShardError, ShardHealth,
+                                     ShardLost, ShardTimeout,
+                                     TransientShardError)
+from ..distributed.sharding import (DATA_AXIS, BankPartition, bank_mesh,
+                                    mesh_bank_shape)
 
 __all__ = ["ShardedFilterBankEngine", "PendingChunk"]
 
 
 class PendingChunk:
     """In-flight outputs of one `push_async`: per-shard device arrays plus
-    the reassembly recipe.  `result()` materializes on the host — each
-    shard's block is read off its own devices and rows are restored to
-    caller order with one index permutation (no device-side gather)."""
+    the reassembly recipe and the chunk's replay material (tail snapshot
+    + raw samples).  `result()` materializes on the host — each shard's
+    block is read off its own devices and rows are restored to caller
+    order with one index permutation (no device-side gather) — and is
+    where faults are detected and recovered: a lost shard triggers the
+    engine's re-partition + replay, a corrupted block is replayed in
+    place, a transient error re-arms the chunk and propagates for the
+    server's retry loop."""
 
-    def __init__(self, shard_outs, inv, n_out, offsets, n_filters, channels):
+    def __init__(self, engine, shard_outs, inv, n_out, offsets,
+                 n_filters, channels, snapshot=None, chunk=None,
+                 chunk_idx=0):
+        self._engine = engine
         self._shard_outs = shard_outs
         self._inv = inv
         self._offsets = offsets
         self.n_out = int(n_out)
         self._shape = (n_filters, channels)
         self._resolved = None
+        self._invalid = False
+        self.snapshot = snapshot
+        self.chunk = chunk
+        self.chunk_idx = int(chunk_idx)
+        self._heals = 0  # corruption replays consumed on this chunk
+
+    def _rearm(self, shard_outs, offsets, inv) -> None:
+        """Swap in a replay's fresh dispatch (possibly from a different
+        partition after a recovery re-partition)."""
+        self._shard_outs = shard_outs
+        self._offsets = offsets
+        self._inv = inv
+
+    def invalidate(self) -> None:
+        """Mark the chunk unusable (engine reset / terminal failure):
+        `result()` will raise `PendingInvalidated`, and the engine stops
+        tracking it for replay."""
+        self._invalid = True
+        self._shard_outs = None
+        self.snapshot = None
+        self.chunk = None
+        eng = self._engine
+        if eng is not None and self in eng._inflight:
+            eng._inflight.remove(self)
 
     def result(self) -> np.ndarray:
-        """Block until the chunk's outputs are ready → int32 (B, C, n_out)."""
+        """Block until the chunk's outputs are ready → int32 (B, C, n_out).
+
+        Raises `PendingInvalidated` if the engine's stream state moved
+        on (``reset()`` while this push was outstanding), re-raises
+        `TransientShardError` after re-arming the chunk (the server
+        retries), and raises `ShardLost` only when recovery found no
+        surviving devices."""
         if self._resolved is not None:
             return self._resolved
+        if self._invalid:
+            raise PendingInvalidated(
+                "engine stream state moved on before this chunk resolved "
+                "(reset() or a terminal failure) — its shard outputs are "
+                "stale and will not be reassembled"
+            )
         b, c = self._shape
         if self.n_out <= 0:
             self._resolved = np.zeros((b, c, 0), np.int32)
             return self._resolved
-        parts = []
-        for y, off in zip(self._shard_outs, self._offsets):
-            if isinstance(y, list):  # specialized shard: per-filter arrays
-                rows = [
-                    np.stack([np.asarray(a)[: self.n_out] for a in chans])
-                    for chans in y
-                ]
-                parts.append(np.stack(rows))
-            else:
-                parts.append(np.asarray(y)[:, :, off: off + self.n_out])
-        out = np.concatenate(parts, axis=0)[self._inv]
-        self._shard_outs = None  # free device references
+        eng = self._engine
+        while True:
+            try:
+                out = eng._materialize(self)
+                break
+            except ShardCorruption as e:
+                eng.fault.detections += 1
+                eng.fault.corruptions += 1
+                self._heals += 1
+                if self._heals > eng.max_heals:
+                    # persistent corruption == a lying shard: treat as lost
+                    eng._recover(ShardLost(
+                        e.shard,
+                        f"shard {e.shard}: corruption persisted after "
+                        f"{eng.max_heals} replays",
+                    ))
+                else:
+                    eng._replay_one(self)
+            except TransientShardError:
+                eng.fault.detections += 1
+                eng.fault.transients += 1
+                eng._replay_one(self)  # re-arm so the next attempt is fresh
+                raise
+            except ShardLost as e:
+                eng._recover(e)  # re-partitions + replays, or re-raises
         self._resolved = np.ascontiguousarray(out)
+        self._shard_outs = None  # free device references + replay material
+        self.snapshot = None
+        self.chunk = None
+        if eng is not None and self in eng._inflight:
+            eng._inflight.remove(self)
         return self._resolved
 
 
@@ -112,6 +199,19 @@ class ShardedFilterBankEngine:
     tile, merge, chunk_hint, interpret
         As `repro.filters.FilterBankEngine`; per-shard tiles/modes are
         autotuned per shard unless ``tile`` pins them.
+    fault_injector : repro.distributed.faultbank.FaultInjector | None
+        Deterministic chaos hooks (tests/benchmarks only): consulted on
+        every shard dispatch and materialize.
+    shard_timeout : float | None
+        Hard per-shard materialize deadline in seconds; expiry is
+        escalated to `ShardTimeout` → shard loss.  ``None`` disables
+        the watchdog timeout (heartbeats are still recorded).
+    integrity_check : bool
+        Recompute boundary output positions of every shard block on the
+        host and raise `ShardCorruption` on mismatch (cost: a handful
+        of taps-length dot products per shard per push).
+    straggler_factor : float
+        `ShardHealth` slow-shard multiple over the running median.
     """
 
     def __init__(
@@ -125,10 +225,13 @@ class ShardedFilterBankEngine:
         merge: int | None = None,
         chunk_hint: int = 2048,
         interpret: bool | None = None,
+        fault_injector=None,
+        shard_timeout: float | None = None,
+        integrity_check: bool = False,
+        straggler_factor: float = 3.0,
     ):
         from ..compiler import BlmacProgram, compile_bank
-        from ..kernels.runtime import (autotune_sharded_dispatch,
-                                       resolve_interpret)
+        from ..kernels.runtime import resolve_interpret
 
         if isinstance(qbank, BlmacProgram):
             program = qbank
@@ -144,27 +247,60 @@ class ShardedFilterBankEngine:
             raise ValueError("channels must be >= 1")
         if mesh is None:
             mesh = bank_mesh()
-        self.mesh = mesh
         self.program = program
         self.qbank = program.qbank
         self.n_filters = program.n_filters
         self.taps = program.taps
         self.channels = int(channels)
         self.interpret = resolve_interpret(interpret)
+        self._halo = self.taps - 1
+        # construction preferences, reused verbatim by every recovery
+        # re-configure so a rebuilt mesh honors the caller's pins
+        self._force_bank = n_bank_shards
+        self._force_data = data_mode
+        self._tile_arg = tile
+        self._merge_arg = merge
+        self._chunk_hint = chunk_hint
+        self._interpret_arg = interpret
+        self.injector = fault_injector
+        self.shard_timeout = shard_timeout
+        self.integrity_check = bool(integrity_check)
+        self._straggler_factor = float(straggler_factor)
+        self.max_heals = 2  # corruption replays per chunk before loss
+        self.fault = FaultStats()
+        self._plain = None  # set when degraded to the unsharded engine
+        self._inflight: list[PendingChunk] = []
+        self._chunk_idx = 0
+        self._configure(mesh)
+        # overlap-save state: the last taps-1 samples of every channel
+        self._tail = np.zeros((channels, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+
+    # -- construction helpers ----------------------------------------------
+
+    def _configure(self, mesh: Mesh, force_shards: int | None = None) -> None:
+        """(Re)build the mesh-dependent half of the engine: autotuned
+        plan, partition, per-shard dispatch closures, chunk quantum and
+        the `ShardHealth` watchdog.  Called at construction and again by
+        `_recover` with the surviving-device mesh."""
+        from ..kernels.runtime import autotune_sharded_dispatch
+
         n_bank, n_data = mesh_bank_shape(mesh)
         if n_bank * n_data != mesh.size:
             raise ValueError(
                 f"mesh must be ({'bank'}, {'data'})-shaped, got {mesh.shape}"
             )
-        force = None
-        if n_bank_shards is not None:
-            force = max(1, min(int(n_bank_shards), n_bank, self.n_filters))
+        force = force_shards if force_shards is not None else self._force_bank
+        if force is not None:
+            force = max(1, min(int(force), n_bank, self.n_filters))
         self.plan, self.partition, schedules = autotune_sharded_dispatch(
-            program, channels=self.channels, mesh_shape=(n_bank, n_data),
-            tile=tile, chunk_hint=chunk_hint, interpret=interpret,
-            force_shards=force, force_data=data_mode,
+            self.program, channels=self.channels, mesh_shape=(n_bank, n_data),
+            tile=self._tile_arg, chunk_hint=self._chunk_hint,
+            interpret=self._interpret_arg,
+            force_shards=force, force_data=self._force_data,
         )
-        if merge is not None:
+        if self._merge_arg is not None:
             # re-plan only the scheduled shards whose merge differs,
             # KEEPING each shard's autotuned bank tile, and stamp the
             # override into the shard plans; the re-plan goes through the
@@ -173,8 +309,9 @@ class ShardedFilterBankEngine:
             # schedules — the cost model is not re-run for a forced merge
             import dataclasses
 
+            merge = self._merge_arg
             schedules = tuple(
-                program.select(rows).schedule(sched.tile_size, merge)
+                self.program.select(rows).schedule(sched.tile_size, merge)
                 if sched is not None and sched.merge != merge else sched
                 for rows, sched in zip(self.partition.assign, schedules)
             )
@@ -186,10 +323,10 @@ class ShardedFilterBankEngine:
                     for p in self.plan.shard_plans
                 ),
             )
+        self.mesh = mesh
         self.n_bank_shards = self.plan.n_bank_shards
         self.n_data = self.plan.n_data
         self.data_mode = self.plan.data_mode
-        self._halo = self.taps - 1
         # chunk lengths are quantized to a multiple of every shard's tile
         # so ragged pushes hit a handful of jit-cache entries; only TIME
         # sharding additionally needs the ×n_data factor (each device's
@@ -202,22 +339,68 @@ class ShardedFilterBankEngine:
                 self._quantum *= 2
 
         devices = np.asarray(mesh.devices).reshape(n_bank, n_data)
+        self._device_rows = [devices[r] for r in range(n_bank)]
         self._shards = []
         for s, (rows, plan) in enumerate(
             zip(self.partition.assign, self.plan.shard_plans)
         ):
             self._shards.append(
                 self._build_shard(
-                    program.select(rows),  # the autotuner's exact subprogram
+                    self.program.select(rows),  # the autotuner's subprogram
                     plan, schedules[s], devices[s % n_bank],
                 )
             )
-        # overlap-save state: the last taps-1 samples of every channel
-        self._tail = np.zeros((channels, 0), np.int32)
-        self.samples_in = 0
-        self.samples_out = 0
+        self.health = ShardHealth(
+            len(self._shards), timeout=self.shard_timeout,
+            straggler_factor=self._straggler_factor,
+        )
 
-    # -- construction helpers ----------------------------------------------
+    def _configure_degraded(self, device) -> None:
+        """Last-resort recovery target: one surviving device.  The SAME
+        `BlmacProgram` is lowered through the plain single-device
+        `FilterBankEngine` (its autotuned packed/specialized path), and
+        the shard list collapses to one host-side closure.  ``device``
+        is the survivor; on the forced-host-platform meshes the tests
+        use, every "device" shares the host, so the plain engine's
+        default placement is the survivor's compute either way."""
+        from ..core.costmodel import BankDispatchPlan, ShardedBankPlan
+        from .bank import FilterBankEngine
+
+        del device  # simulated-loss placement note above
+        plain = FilterBankEngine(
+            self.program, channels=self.channels, tile=self._tile_arg,
+            merge=self._merge_arg, chunk_hint=self._chunk_hint,
+            interpret=self._interpret_arg,
+        )
+        self._plain = plain
+        plan1 = plain.dispatch_plan
+        if plan1 is None:
+            plan1 = BankDispatchPlan(
+                mode=plain.mode, tile=plain.tile,
+                bank_tile=plain.bank_tile or 0, merge=plain.merge,
+                predicted_us=float("nan"),
+            )
+        self.plan = ShardedBankPlan(1, 1, "none", (plan1,),
+                                    plan1.predicted_us)
+        self.n_bank_shards, self.n_data, self.data_mode = 1, 1, "none"
+        b = self.n_filters
+        self.partition = BankPartition(
+            assign=(np.arange(b),), inv=np.arange(b),
+            cost=np.asarray([float(self.program.filter_costs.sum())]),
+        )
+        self._quantum = plain.tile
+        self._device_rows = None
+        self.mesh = None
+
+        def run_plain(buf, n):
+            return plain._apply(buf[:, :n])
+
+        self._shards = [(run_plain, 0)]
+        self.health = ShardHealth(
+            1, timeout=self.shard_timeout,
+            straggler_factor=self._straggler_factor,
+        )
+        self.fault.degraded_since = time.perf_counter()
 
     def _build_shard(self, subprogram, plan, schedule, dev_row):
         """One bank shard = (dispatch closure, device row).  Returns a
@@ -333,7 +516,10 @@ class ShardedFilterBankEngine:
         """Feed (C, n) samples (or (n,) when C == 1); dispatches every
         bank shard onto its mesh row and returns WITHOUT blocking on the
         device work — the double-buffered serving path overlaps the next
-        chunk's host framing with this chunk's kernels."""
+        chunk's host framing with this chunk's kernels.  The returned
+        `PendingChunk` carries a `TailSnapshot` of the pre-push stream
+        state, so the chunk can be replayed bit-exactly through a
+        recovered mesh if a shard dies before it resolves."""
         chunk = np.asarray(chunk)
         if chunk.ndim == 1:
             chunk = chunk[None, :]
@@ -341,30 +527,56 @@ class ShardedFilterBankEngine:
             raise ValueError(
                 f"expected {self.channels} channels, got {chunk.shape[0]}"
             )
+        idx = self._chunk_idx
+        self._chunk_idx += 1
+        snap = self.snapshot_tail()
+        chunk_i = chunk.astype(np.int32)
         self.samples_in += chunk.shape[1]
-        buf = np.concatenate([self._tail, chunk.astype(np.int32)], axis=1)
+        buf = np.concatenate([self._tail, chunk_i], axis=1)
         n = buf.shape[1]
         if n < self.taps:  # still priming
             self._tail = buf
             return PendingChunk(
-                [], self.partition.inv, 0, [], self.n_filters, self.channels
+                self, [], self.partition.inv, 0, [],
+                self.n_filters, self.channels,
+                snapshot=snap, chunk=chunk_i, chunk_idx=idx,
             )
         self._tail = (
             buf[:, n - self._halo:] if self._halo else buf[:, :0]
         )
         n_out = n - self.taps + 1
-        n_pad = -(-n // self._quantum) * self._quantum
-        if n_pad != n:
-            buf = np.pad(buf, ((0, 0), (0, n_pad - n)))
-        outs, offsets = [], []
-        for fn, offset in self._shards:
-            outs.append(fn(buf, n))
-            offsets.append(offset)
+        outs, offsets = self._dispatch_shards(buf, n, idx)
         self.samples_out += n_out
-        return PendingChunk(
-            outs, self.partition.inv, n_out, offsets,
+        p = PendingChunk(
+            self, outs, self.partition.inv, n_out, offsets,
             self.n_filters, self.channels,
+            snapshot=snap, chunk=chunk_i, chunk_idx=idx,
         )
+        self._inflight.append(p)
+        return p
+
+    def _dispatch_shards(self, buf, n, chunk_idx):
+        """Pad ``buf`` to the chunk quantum and dispatch every shard.
+        A dispatch-time `ShardError` (injected or real) is STORED in the
+        shard's output slot instead of raised — detection and recovery
+        happen at `result()`, preserving push_async's non-blocking
+        contract."""
+        n_pad = -(-n // self._quantum) * self._quantum
+        if n_pad != buf.shape[1]:
+            buf = np.pad(buf, ((0, 0), (0, n_pad - buf.shape[1])))
+        outs, offsets = [], []
+        for s, (fn, offset) in enumerate(self._shards):
+            try:
+                if self.injector is not None:
+                    self.injector.on_dispatch(s, chunk_idx)
+                y = fn(buf, n)
+            except ShardError as e:
+                if e.shard is None:
+                    e.shard = s
+                y = e
+            outs.append(y)
+            offsets.append(offset)
+        return outs, offsets
 
     def push(self, chunk) -> np.ndarray:
         """Synchronous `push_async` → int32 (B, C, n_out)."""
@@ -374,15 +586,254 @@ class ShardedFilterBankEngine:
         return self.push(chunk)
 
     def reset(self) -> None:
-        """Drop all buffered history (start a new stream)."""
+        """Drop all buffered history (start a new stream).  Outstanding
+        `PendingChunk`s are INVALIDATED — their ``result()`` raises
+        `PendingInvalidated` instead of silently reassembling shard
+        outputs that belong to the abandoned stream."""
+        for p in list(self._inflight):
+            p.invalidate()
+        self._inflight = []
         self._tail = np.zeros((self.channels, 0), np.int32)
         self.samples_in = 0
         self.samples_out = 0
+        self._chunk_idx = 0
 
     @property
     def pending(self) -> int:
         """Samples buffered but not yet old enough to finish a window."""
         return self._tail.shape[1]
+
+    # -- tail snapshot / restore (content-addressed stream state) -----------
+
+    def snapshot_tail(self):
+        """Freeze the overlap-save stream state as a
+        `repro.compiler.TailSnapshot` keyed to this engine's program
+        digest — the deterministic replay point behind fault recovery,
+        and `save()`-able next to `BlmacProgram.save()` for cross-
+        process stream resume."""
+        from ..compiler.state import TailSnapshot
+
+        return TailSnapshot(
+            program_key=self.program.key, channels=self.channels,
+            samples_in=self.samples_in, samples_out=self.samples_out,
+            tail=self._tail.copy(),
+        )
+
+    def restore_tail(self, snapshot) -> None:
+        """Adopt a `TailSnapshot` captured on THIS program (validated by
+        content key — restoring another bank's stream is a loud error).
+        Outstanding pendings are invalidated first (`reset` semantics)."""
+        if snapshot.program_key != self.program.key:
+            raise ValueError(
+                f"snapshot belongs to program {snapshot.program_key[:12]}…, "
+                f"this engine runs {self.program.key[:12]}…"
+            )
+        if int(snapshot.channels) != self.channels:
+            raise ValueError(
+                f"snapshot has {snapshot.channels} channels, "
+                f"engine has {self.channels}"
+            )
+        self.reset()
+        self._tail = np.asarray(snapshot.tail, np.int32).copy()
+        self.samples_in = int(snapshot.samples_in)
+        self.samples_out = int(snapshot.samples_out)
+
+    # -- fault detection / recovery -----------------------------------------
+
+    def _materialize(self, p: PendingChunk) -> np.ndarray:
+        """Assemble one pending chunk on the host; raises the first
+        shard fault it detects (stored dispatch errors, watchdog
+        timeout, integrity-probe corruption)."""
+        parts = []
+        for s, (y, off) in enumerate(zip(p._shard_outs, p._offsets)):
+            if isinstance(y, ShardError):
+                raise y
+            parts.append(self._materialize_shard(s, p, y, off))
+        return np.concatenate(parts, axis=0)[p._inv]
+
+    def _materialize_shard(self, s, p, y, off):
+        inj = self.injector
+        n_out = p.n_out
+
+        def read():
+            if inj is not None:
+                inj.on_materialize(s, p.chunk_idx)
+            if isinstance(y, list):  # specialized shard: per-filter arrays
+                rows = [
+                    np.stack([np.asarray(a)[:n_out] for a in chans])
+                    for chans in y
+                ]
+                return np.stack(rows)
+            return np.asarray(y)[:, :, off: off + n_out]
+
+        t0 = time.perf_counter()
+        if self.health.timeout is not None:
+            part = self._with_timeout(read, s)
+        else:
+            part = read()
+        if self.health.record(s, time.perf_counter() - t0):
+            self.fault.stragglers += 1
+        if inj is not None:
+            part = inj.corrupt(s, p.chunk_idx, part)
+        if self.integrity_check:
+            self._verify_part(s, part, p)
+        return part
+
+    def _with_timeout(self, fn, s):
+        """Run one shard materialize under the `ShardHealth` hard
+        deadline; expiry escalates to `ShardTimeout` (→ loss).  The
+        worker thread is abandoned, not joined — a wedged device read
+        must not wedge the recovery path too."""
+        from concurrent.futures import ThreadPoolExecutor
+        from concurrent.futures import TimeoutError as FuturesTimeout
+
+        ex = ThreadPoolExecutor(max_workers=1)
+        try:
+            fut = ex.submit(fn)
+            try:
+                return fut.result(timeout=self.health.timeout)
+            except FuturesTimeout:
+                raise ShardTimeout(
+                    s, f"shard {s} exceeded the {self.health.timeout:.3f}s "
+                       f"watchdog timeout"
+                ) from None
+        finally:
+            ex.shutdown(wait=False)
+
+    def _verify_part(self, s, part, p):
+        """Boundary integrity probe: recompute a handful of this shard's
+        output positions on the host (int64 dot products over the
+        snapshot tail + raw chunk) and compare bit-for-bit.  Probed
+        positions are t = 0, the final output, and every data-axis
+        slice boundary — where halo-exchange or reassembly corruption
+        shows up first."""
+        rows = self.partition.assign[s]
+        full = np.concatenate(
+            [np.asarray(p.snapshot.tail, np.int64),
+             np.asarray(p.chunk, np.int64)], axis=1,
+        )
+        n_out = p.n_out
+        pos = {0, n_out - 1}
+        for j in range(1, self.n_data):
+            pos.add(min(max(j * n_out // self.n_data, 0), n_out - 1))
+        pos = sorted(pos)
+        wins = np.stack([full[:, t: t + self.taps] for t in pos])  # (P,C,taps)
+        expect = np.einsum("rj,pcj->rpc", self.qbank[rows], wins)
+        got = np.asarray(part, np.int64)[:, :, pos].transpose(0, 2, 1)
+        if not np.array_equal(got, expect):
+            raise ShardCorruption(
+                s, f"shard {s} failed the boundary integrity probe on "
+                   f"chunk {p.chunk_idx}"
+            )
+
+    def _recover(self, err: ShardLost) -> None:
+        """Handle a detected shard loss: drop the dead mesh row,
+        re-partition the bank over the survivors (recovery shard count
+        chosen by modelled cost), rebuild the dispatch closures, and
+        replay every in-flight chunk from its tail snapshot.  Raises
+        `ShardLost` when no surviving device remains."""
+        self.fault.detections += 1
+        if isinstance(err, ShardTimeout):
+            self.fault.timeouts += 1
+        s = err.shard
+        rows = self._device_rows
+        if self._plain is not None or rows is None or len(rows) <= 1:
+            raise ShardLost(
+                s, f"shard {s} lost with no surviving devices to "
+                   f"re-partition onto: {err}"
+            ) from err
+        t0 = time.perf_counter()
+        self.fault.lost_shards += 1
+        if self.injector is not None:
+            self.injector.on_shard_removed(s)
+        del rows[s]
+        n_bank = len(rows)
+        n_data = int(np.asarray(rows[0]).size)
+        if n_bank == 1 and n_data == 1:
+            self._configure_degraded(np.asarray(rows[0]).reshape(-1)[0])
+        else:
+            devices = [d for row in rows
+                       for d in np.asarray(row).reshape(-1)]
+            target = self._choose_recovery_shards(n_bank, n_data)
+            self._configure(bank_mesh(n_bank, n_data, devices=devices),
+                            force_shards=target)
+        self._replay_inflight()
+        self.fault.recoveries += 1
+        self.fault.last_recovery_s = time.perf_counter() - t0
+
+    def _choose_recovery_shards(self, n_bank: int, n_data: int) -> int:
+        """Pick the recovery target's bank-shard count by modelled cost
+        (`repro.core.costmodel.predict_recovery_us`): each candidate
+        pays for its fresh per-shard schedules and the in-flight replay,
+        then its steady-state latency over the amortization horizon.
+        Candidates are the full surviving row count and the power of two
+        below it (partitions the program has likely already memoized).
+        A caller-forced shard count short-circuits the sweep."""
+        from ..core.costmodel import predict_recovery_us
+        from ..kernels.runtime import autotune_sharded_dispatch
+
+        if self._force_bank is not None:
+            return max(1, min(int(self._force_bank), n_bank, self.n_filters))
+        replay = sum(p.n_out for p in self._inflight)
+        pow2 = 1
+        while pow2 * 2 <= n_bank:
+            pow2 *= 2
+        best, best_us = None, float("inf")
+        for cand in sorted({min(n_bank, self.n_filters),
+                            min(pow2, self.n_filters)}):
+            plan, _, schedules = autotune_sharded_dispatch(
+                self.program, channels=self.channels,
+                mesh_shape=(n_bank, n_data), tile=self._tile_arg,
+                chunk_hint=self._chunk_hint, interpret=self._interpret_arg,
+                force_shards=cand, force_data=self._force_data,
+            )
+            n_scheduled = sum(1 for sc in schedules if sc is not None)
+            us = predict_recovery_us(plan.predicted_us, n_scheduled, replay)
+            if us < best_us:
+                best, best_us = cand, us
+        return best
+
+    def _replay_inflight(self) -> None:
+        """Re-dispatch every unresolved chunk through the recovered
+        mesh, oldest first — each from its own tail snapshot, so the
+        replayed stream is bit-exact with the uninterrupted one."""
+        for p in list(self._inflight):
+            self._replay_one(p)
+
+    def _replay_one(self, p: PendingChunk) -> None:
+        """Re-dispatch ONE pending chunk from its tail snapshot and
+        swap the fresh shard outputs (and the current partition's
+        reassembly recipe) into the pending."""
+        buf = np.concatenate(
+            [np.asarray(p.snapshot.tail, np.int32), p.chunk], axis=1
+        )
+        outs, offsets = self._dispatch_shards(buf, buf.shape[1], p.chunk_idx)
+        p._rearm(outs, offsets, self.partition.inv)
+        self.fault.replayed_chunks += 1
+        self.fault.replayed_samples += p.n_out
+
+    # -- introspection ------------------------------------------------------
+
+    def fault_stats(self) -> dict:
+        """JSON-ready fault/recovery counters (see
+        `repro.distributed.faultbank.FaultStats`) plus the live mesh
+        shape, in-flight depth, injected-fault counts (when a
+        `FaultInjector` is attached) and the `ShardHealth` heartbeat
+        summary — the observability surface next to
+        `repro.compiler.cache_stats()`."""
+        d = self.fault.as_dict()
+        d.update(
+            n_bank_shards=self.n_bank_shards,
+            n_data=self.n_data,
+            data_mode=self.data_mode,
+            inflight=len(self._inflight),
+            injected=(
+                self.injector.faults_injected()
+                if self.injector is not None else None
+            ),
+            health=self.health.summary(),
+        )
+        return d
 
     def time_shards(self, chunk, repeats: int = 3) -> np.ndarray:
         """(n_shards,) best-of-``repeats`` isolated wall seconds per bank
@@ -395,8 +846,6 @@ class ShardedFilterBankEngine:
         throughput model aggregates.  `benchmarks/bank_sharded.py` builds
         its critical-path scaling row from exactly this.
         """
-        import time
-
         chunk = np.atleast_2d(np.asarray(chunk)).astype(np.int32)
         n = chunk.shape[1]
         if n < self.taps:
@@ -416,14 +865,13 @@ class ShardedFilterBankEngine:
                 times[s] = min(times[s], time.perf_counter() - t0)
         return times
 
-    # -- introspection ------------------------------------------------------
-
     def describe(self) -> str:
         """One line for logs: mesh, shard modes, balance, predicted cost."""
         modes = ",".join(p.mode[:4] for p in self.plan.shard_plans)
+        degraded = " DEGRADED" if self._plain is not None else ""
         return (
             f"sharded-bank B={self.n_filters} C={self.channels} "
-            f"mesh=({self.n_bank_shards}x{self.n_data}) "
+            f"mesh=({self.n_bank_shards}x{self.n_data}){degraded} "
             f"data={self.data_mode} modes=[{modes}] "
             f"imbalance={self.partition.imbalance:.2f} "
             f"predicted={self.plan.predicted_us:.0f}us"

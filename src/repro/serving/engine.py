@@ -159,6 +159,28 @@ class AsyncBankServer:
     resolves the OLDEST chunk first and returns its outputs, giving a
     strict-ordered stream with no unbounded device-memory growth.
 
+    Failure semantics (see `repro.distributed.faultbank`): permanent
+    shard loss is the ENGINE's job — it re-partitions and replays, and
+    the server never sees it unless no device survived.  What the
+    server owns is the bounded-liveness contract on top:
+
+      * `TransientShardError` from a chunk's ``result()`` is retried up
+        to ``max_retries`` times with exponential backoff (the engine
+        re-arms the chunk before re-raising, so each retry is a fresh
+        dispatch); the budget exhausting raises `RetriesExhausted`,
+      * ``deadline_s`` bounds one chunk's total resolve time across all
+        its attempts; expiry raises `DeadlineExceeded`,
+      * a failed chunk is dropped from the stream (its pending is
+        invalidated so a late ``result()`` cannot resurrect stale
+        outputs) and the error PROPAGATES to the caller — never a hang,
+      * strict output order is preserved across failures and mid-flight
+        recoveries: chunks resolve oldest-first, and a recovery replay
+        happens inside the oldest chunk's ``result()`` before any newer
+        chunk is touched.
+
+    ``fault_stats()`` surfaces the server's retry/failure counters next
+    to the engine's detection/recovery counters.
+
     Typical loop::
 
         server = AsyncBankServer(engine)
@@ -169,14 +191,24 @@ class AsyncBankServer:
             consume(done)
     """
 
-    def __init__(self, engine, depth: int = 2):
+    def __init__(self, engine, depth: int = 2, max_retries: int = 3,
+                 backoff_s: float = 0.01, deadline_s: float | None = None):
         if depth < 1:
             raise ValueError("depth must be >= 1")
+        if max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
         self.engine = engine
         self.depth = int(depth)
+        self.max_retries = int(max_retries)
+        self.backoff_s = float(backoff_s)
+        self.deadline_s = deadline_s
         self._inflight: list = []
         self.chunks_in = 0
         self.chunks_out = 0
+        self.retries = 0
+        self.retries_exhausted = 0
+        self.deadline_expired = 0
+        self.failed_chunks = 0
 
     @property
     def program(self):
@@ -185,15 +217,82 @@ class AsyncBankServer:
         next serving process warm-starts without recompiling."""
         return getattr(self.engine, "program", None)
 
+    def _resolve(self, pending):
+        """Resolve ONE pending chunk under the retry/deadline budget.
+
+        Transient errors sleep an exponentially growing backoff and
+        retry (the engine re-armed the chunk before raising, so each
+        ``result()`` attempt is a fresh dispatch).  On a terminal
+        failure — budget exhausted, deadline elapsed, or a permanent
+        error — the pending is invalidated (dropped from the stream and
+        from the engine's replay set) and the error propagates."""
+        import time
+
+        from ..distributed.faultbank import (DeadlineExceeded,
+                                             RetriesExhausted,
+                                             TransientShardError)
+
+        t0 = time.monotonic()
+        delay = self.backoff_s
+        failures = 0
+        while True:
+            try:
+                return pending.result()
+            except TransientShardError as e:
+                failures += 1
+                elapsed = time.monotonic() - t0
+                if self.deadline_s is not None and elapsed >= self.deadline_s:
+                    self.deadline_expired += 1
+                    self._drop(pending)
+                    raise DeadlineExceeded(
+                        e.shard,
+                        f"chunk missed its {self.deadline_s:.3f}s deadline "
+                        f"after {failures} attempt(s) ({elapsed:.3f}s "
+                        f"elapsed)",
+                    ) from e
+                if failures > self.max_retries:
+                    self.retries_exhausted += 1
+                    self._drop(pending)
+                    raise RetriesExhausted(
+                        e.shard,
+                        f"chunk failed {failures} attempt(s) "
+                        f"(max_retries={self.max_retries}): {e}",
+                    ) from e
+                self.retries += 1
+                time.sleep(delay)
+                delay *= 2
+            except Exception:
+                # permanent: unrecoverable loss, invalidated pending, …
+                self._drop(pending)
+                raise
+
+    def _drop(self, pending) -> None:
+        """Remove a terminally failed chunk from the stream: out of the
+        server queue (so the NEXT submit/drain resolves the next-oldest
+        chunk, not the dead one again) and invalidated on the engine
+        side (so a late ``result()`` raises instead of resurrecting
+        stale outputs, and recovery replays stop tracking it)."""
+        self.failed_chunks += 1
+        if pending in self._inflight:
+            self._inflight.remove(pending)
+        invalidate = getattr(pending, "invalidate", None)
+        if callable(invalidate):
+            invalidate()
+
     def submit(self, chunk) -> list:
         """Dispatch one chunk; returns the list of chunk outputs that
         RESOLVED to make room (possibly empty, never more than one under
-        steady state)."""
+        steady state).  Raises on a terminally failed chunk (see class
+        docstring) — the failed chunk is dropped, the rest of the
+        stream's order is unaffected."""
         import numpy as np
 
         done = []
         while len(self._inflight) >= self.depth:
-            done.append(self._inflight.pop(0).result())
+            pending = self._inflight[0]
+            out = self._resolve(pending)  # raises AFTER dropping the chunk
+            self._inflight.pop(0)
+            done.append(out)
             self.chunks_out += 1
         pending = self.engine.push_async(np.asarray(chunk))
         self._inflight.append(pending)
@@ -202,14 +301,33 @@ class AsyncBankServer:
 
     def drain(self) -> list:
         """Resolve every in-flight chunk, oldest first."""
-        done = [p.result() for p in self._inflight]
-        self.chunks_out += len(self._inflight)
-        self._inflight = []
+        done = []
+        while self._inflight:
+            out = self._resolve(self._inflight[0])
+            self._inflight.pop(0)
+            done.append(out)
+            self.chunks_out += 1
         return done
 
     @property
     def inflight(self) -> int:
         return len(self._inflight)
+
+    def fault_stats(self) -> dict:
+        """Server retry/failure counters merged with the engine's
+        detection/recovery counters (``engine`` key; ``None`` for
+        engines without a ``fault_stats`` surface)."""
+        eng_stats = getattr(self.engine, "fault_stats", None)
+        return {
+            "retries": self.retries,
+            "retries_exhausted": self.retries_exhausted,
+            "deadline_expired": self.deadline_expired,
+            "failed_chunks": self.failed_chunks,
+            "chunks_in": self.chunks_in,
+            "chunks_out": self.chunks_out,
+            "inflight": len(self._inflight),
+            "engine": eng_stats() if callable(eng_stats) else None,
+        }
 
 
 class ServeEngine:

@@ -52,6 +52,7 @@ from repro.filters import FilterBankEngine, sweep_bank, sweep_specs
 
 __all__ = [
     "DifferentialReport",
+    "chaos_check",
     "five_way_check",
     "four_way_check",
     "random_type1_bank",
@@ -300,6 +301,79 @@ def five_way_check(
         scalar_rejected=rejected,
         sharded_mesh=(seng.n_bank_shards, seng.n_data),
     )
+
+
+def chaos_check(
+    qbank: np.ndarray,
+    kills,
+    *,
+    n_chunks: int = 6,
+    chunk: int = 512,
+    mesh=None,
+    n_bank_shards: int | None = None,
+    data_mode: str | None = None,
+    depth: int = 2,
+    seed: int = 0,
+    interpret: bool | None = None,
+    integrity_check: bool = True,
+) -> dict:
+    """Chaos leg of the harness: kill shards mid-stream, assert the
+    recovered stream is bit-exact vs the oracle and the fault counters
+    match the injected faults.
+
+    ``kills`` is a list of ``(shard, at_chunk)`` grid points handed to
+    `repro.distributed.faultbank.FaultInjector.kill_shard` — shard
+    indices are bank-shard SLOTS at fire time (after a recovery the
+    survivors renumber from 0), so sequential kills read the way a test
+    reasons about the recovered mesh.  The stream runs through
+    `AsyncBankServer` (double-buffered, strict order); every in-flight
+    chunk at each kill is replayed from its tail snapshot through the
+    re-partitioned mesh, and the concatenated output must equal the
+    naive Eq. 2 oracle to the last bit.  The integrity probe is on by
+    default so the halo/reassembly positions are host-verified too.
+    Returns the engine's ``fault_stats()`` for further assertions.
+    """
+    from repro.distributed.faultbank import FaultInjector
+    from repro.filters import ShardedFilterBankEngine
+    from repro.serving import AsyncBankServer
+
+    program = compile_bank(np.atleast_2d(np.asarray(qbank, np.int64)))
+    rng = np.random.default_rng(seed)
+    lim = 1 << (program.spec.sample_bits - 1)
+    x = rng.integers(-lim, lim, n_chunks * chunk)
+    oracle = lower(program, "oracle")(x)[:, 0, :]
+
+    injector = FaultInjector()
+    kills = list(kills)
+    for shard, at_chunk in kills:
+        injector.kill_shard(shard, at_chunk)
+    eng = ShardedFilterBankEngine(
+        program, mesh=mesh, n_bank_shards=n_bank_shards,
+        data_mode=data_mode, interpret=interpret,
+        fault_injector=injector, integrity_check=integrity_check,
+    )
+    server = AsyncBankServer(eng, depth=depth)
+    got = []
+    for k in range(n_chunks):
+        got += server.submit(x[k * chunk: (k + 1) * chunk])
+    got += server.drain()
+    y = np.concatenate([g for g in got if g.shape[2]], axis=2)[:, 0, :]
+    assert np.array_equal(np.asarray(y, np.int64), oracle), (
+        f"chaos: recovered stream != oracle after kills {kills} "
+        f"(final mesh {eng.n_bank_shards}x{eng.n_data})"
+    )
+    stats = eng.fault_stats()
+    assert stats["injected"]["kills"] == len(kills), (
+        f"chaos: {stats['injected']['kills']} of {len(kills)} kills fired "
+        f"— the grid points never hit a live (shard, chunk)"
+    )
+    assert stats["lost_shards"] == len(kills), stats
+    assert stats["recoveries"] == len(kills), stats
+    assert stats["detections"] == len(kills), stats
+    assert server.failed_chunks == 0 and server.chunks_out == n_chunks, (
+        "chaos: the server dropped chunks — recovery must be lossless"
+    )
+    return stats
 
 
 # The harness grew its fifth (sharded) leg in PR 4; the historical name
