@@ -44,6 +44,13 @@ class TailSnapshot:
     was running; ``tail`` is the (channels, ≤ taps−1) int32 history;
     ``samples_in`` / ``samples_out`` are the stream counters at capture
     time.  Engines validate the key and channel count on restore.
+
+    ``session`` is an optional caller-chosen stream identity: the
+    multi-tenant session server (`repro.serving.sessions`) stamps each
+    parked/paused session's id here, so a directory of snapshots is
+    self-describing — which tenant a frozen stream belongs to rides
+    with the artifact, not in a side table.  Engines ignore it; files
+    written before the field existed load with ``session=""``.
     """
 
     program_key: str
@@ -51,6 +58,7 @@ class TailSnapshot:
     samples_in: int
     samples_out: int
     tail: np.ndarray
+    session: str = ""
 
     def save(self, path) -> None:
         """Atomic npz write (tmp + rename), mirroring
@@ -63,6 +71,7 @@ class TailSnapshot:
             "channels": int(self.channels),
             "samples_in": int(self.samples_in),
             "samples_out": int(self.samples_out),
+            "session": str(self.session),
         }
         tmp = f"{path}.tmp"
         with open(tmp, "wb") as f:
@@ -106,4 +115,5 @@ class TailSnapshot:
             samples_in=int(header["samples_in"]),
             samples_out=int(header["samples_out"]),
             tail=tail,
+            session=str(header.get("session", "")),
         )

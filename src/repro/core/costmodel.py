@@ -29,6 +29,7 @@ __all__ = [
     "predict_scheduled_us",
     "predict_sharded_us",
     "predict_recovery_us",
+    "predict_session_step_us",
 ]
 
 
@@ -272,6 +273,44 @@ def predict_recovery_us(
         + replay_samples * REPLAY_US_PER_SAMPLE
         + RECOVERY_HORIZON_PUSHES * float(steady_us)
     )
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant session-step cost model (admission control)
+# ---------------------------------------------------------------------------
+#
+# `BankSessionServer` packs active sessions into the C channel lanes of
+# ONE shared engine and dispatches once per step; when more sessions are
+# active than the engine has lanes, a step takes several rounds.  The
+# kernel computes every lane of every round whether or not it carries a
+# real tenant (idle lanes are zero-padded), so a round costs the full
+# dispatch plus n_slots lane-fills regardless of occupancy — which is
+# exactly the asymmetry admission control needs: adding a session is
+# nearly free until it spills a new round.  Same fitted-on-the-reference-
+# container spirit as the constants above: ranks "admit vs reject", does
+# not predict wall time.
+
+SESSION_LANE_US = 45.0  # per channel lane staged + sliced, per round
+
+
+def predict_session_step_us(
+    dispatch_us: float,
+    n_active: int,
+    n_slots: int,
+) -> float:
+    """Modelled latency of one session-server batching step with
+    ``n_active`` sessions packed into ``n_slots`` shared lanes:
+    ceil(n_active / n_slots) rounds, each a full ``dispatch_us`` bank
+    dispatch (from `predict_specialized_us` / `predict_scheduled_us`)
+    plus the per-lane staging cost of every slot in the round.  The
+    server admits a session only while the predicted step stays inside
+    its latency budget."""
+    if n_slots < 1:
+        raise ValueError("n_slots must be >= 1")
+    if n_active <= 0:
+        return 0.0
+    rounds = -(-int(n_active) // int(n_slots))
+    return rounds * (float(dispatch_us) + n_slots * SESSION_LANE_US)
 
 
 def machine_cycles_batch(

@@ -232,18 +232,20 @@ class FilterBankEngine:
 
     # -- tail snapshot / restore (content-addressed stream state) -----------
 
-    def snapshot_tail(self):
+    def snapshot_tail(self, session: str = ""):
         """Freeze the overlap-save stream state as a
         `repro.compiler.TailSnapshot` keyed to this engine's program
         digest — `save()`-able next to `BlmacProgram.save()` so a
         restarted serving process resumes the stream bit-exactly, and
-        the replay point the sharded engine's fault recovery builds on."""
+        the replay point the sharded engine's fault recovery builds on.
+        ``session`` stamps an optional stream identity into the snapshot
+        (the multi-tenant server labels parked sessions this way)."""
         from ..compiler.state import TailSnapshot
 
         return TailSnapshot(
             program_key=self.program.key, channels=self.channels,
             samples_in=self.samples_in, samples_out=self.samples_out,
-            tail=self._tail.copy(),
+            tail=self._tail.copy(), session=str(session),
         )
 
     def restore_tail(self, snapshot) -> None:
@@ -265,6 +267,32 @@ class FilterBankEngine:
         self.samples_out = int(snapshot.samples_out)
 
     # -- one-shot application ----------------------------------------------
+
+    def apply_lanes(self, buf) -> np.ndarray:
+        """Stateless one-shot bank application over ``channels`` lanes.
+
+        ``buf`` is (C, n) int samples with ``n >= taps``; returns the full
+        (B, C, n − taps + 1) output without touching the engine's
+        overlap-save tail or stream counters.  This is the batched
+        multi-select dispatch surface the session server builds on: it
+        packs many tenants' ``tail + queued`` buffers into the C lanes of
+        ONE shared engine, fires a single dispatch, and slices each
+        tenant's `program.select()` rows / valid sample range out of the
+        result — bit-exactness per lane follows from `push` and
+        `apply_lanes` sharing the same `_apply` path.
+        """
+        buf = np.asarray(buf, np.int32)
+        if buf.ndim != 2 or buf.shape[0] != self.channels:
+            raise ValueError(
+                f"expected ({self.channels}, n) lane buffer, "
+                f"got shape {buf.shape}"
+            )
+        if buf.shape[1] < self.taps:
+            raise ValueError(
+                f"lane buffer has {buf.shape[1]} samples, "
+                f"need >= taps ({self.taps})"
+            )
+        return self._apply(buf)
 
     def _apply(self, buf: np.ndarray) -> np.ndarray:
         from ..kernels.blmac_fir import (bank_schedule_apply, blmac_fir_specialized,

@@ -6,9 +6,13 @@ from .engine import (
     make_decode_fn,
     make_prefill_fn,
 )
+from .sessions import AdmissionRejected, BankSession, BankSessionServer
 
 __all__ = [
+    "AdmissionRejected",
     "AsyncBankServer",
+    "BankSession",
+    "BankSessionServer",
     "ServeEngine",
     "abstract_caches",
     "cache_pspecs",

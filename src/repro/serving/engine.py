@@ -170,9 +170,17 @@ class AsyncBankServer:
         dispatch); the budget exhausting raises `RetriesExhausted`,
       * ``deadline_s`` bounds one chunk's total resolve time across all
         its attempts; expiry raises `DeadlineExceeded`,
+      * each backoff sleep is capped at ``max_backoff_s`` AND clamped to
+        the remaining deadline budget, so an exponential backoff can
+        never sleep past ``deadline_s`` before re-checking,
       * a failed chunk is dropped from the stream (its pending is
         invalidated so a late ``result()`` cannot resurrect stale
         outputs) and the error PROPAGATES to the caller — never a hang,
+      * chunks that already RESOLVED inside the same ``submit``/``drain``
+        call are never discarded by a later chunk's terminal failure:
+        they are buffered and delivered (oldest first) by the next
+        ``submit``/``drain`` call, so the surviving stream stays gapless
+        around the dropped chunk,
       * strict output order is preserved across failures and mid-flight
         recoveries: chunks resolve oldest-first, and a recovery replay
         happens inside the oldest chunk's ``result()`` before any newer
@@ -192,17 +200,22 @@ class AsyncBankServer:
     """
 
     def __init__(self, engine, depth: int = 2, max_retries: int = 3,
-                 backoff_s: float = 0.01, deadline_s: float | None = None):
+                 backoff_s: float = 0.01, deadline_s: float | None = None,
+                 max_backoff_s: float = 1.0):
         if depth < 1:
             raise ValueError("depth must be >= 1")
         if max_retries < 0:
             raise ValueError("max_retries must be >= 0")
+        if max_backoff_s <= 0:
+            raise ValueError("max_backoff_s must be > 0")
         self.engine = engine
         self.depth = int(depth)
         self.max_retries = int(max_retries)
         self.backoff_s = float(backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
         self.deadline_s = deadline_s
         self._inflight: list = []
+        self._ready: list = []  # resolved outputs not yet delivered
         self.chunks_in = 0
         self.chunks_out = 0
         self.retries = 0
@@ -222,10 +235,14 @@ class AsyncBankServer:
 
         Transient errors sleep an exponentially growing backoff and
         retry (the engine re-armed the chunk before raising, so each
-        ``result()`` attempt is a fresh dispatch).  On a terminal
-        failure — budget exhausted, deadline elapsed, or a permanent
-        error — the pending is invalidated (dropped from the stream and
-        from the engine's replay set) and the error propagates."""
+        ``result()`` attempt is a fresh dispatch).  Each sleep is capped
+        at ``max_backoff_s`` and clamped to the remaining ``deadline_s``
+        budget — the doubling can never overshoot the deadline, so a
+        tight deadline expires on time instead of after a stray
+        multi-second sleep.  On a terminal failure — budget exhausted,
+        deadline elapsed, or a permanent error — the pending is
+        invalidated (dropped from the stream and from the engine's
+        replay set) and the error propagates."""
         import time
 
         from ..distributed.faultbank import (DeadlineExceeded,
@@ -233,7 +250,7 @@ class AsyncBankServer:
                                              TransientShardError)
 
         t0 = time.monotonic()
-        delay = self.backoff_s
+        delay = min(self.backoff_s, self.max_backoff_s)
         failures = 0
         while True:
             try:
@@ -259,8 +276,17 @@ class AsyncBankServer:
                         f"(max_retries={self.max_retries}): {e}",
                     ) from e
                 self.retries += 1
-                time.sleep(delay)
-                delay *= 2
+                sleep_s = delay
+                if self.deadline_s is not None:
+                    # never sleep past the deadline: wake exactly at it,
+                    # give the chunk one final attempt, and let the check
+                    # above expire it
+                    sleep_s = min(
+                        sleep_s, self.deadline_s - (time.monotonic() - t0)
+                    )
+                if sleep_s > 0:
+                    time.sleep(sleep_s)
+                delay = min(delay * 2, self.max_backoff_s)
             except Exception:
                 # permanent: unrecoverable loss, invalidated pending, …
                 self._drop(pending)
@@ -279,34 +305,54 @@ class AsyncBankServer:
         if callable(invalidate):
             invalidate()
 
+    def _take_ready(self) -> list:
+        """Outputs that resolved during a previous call whose drain loop
+        then failed terminally — delivered (oldest first) ahead of this
+        call's own resolves, so a dropped chunk never takes its already-
+        resolved elders down with it."""
+        done, self._ready = self._ready, []
+        return done
+
     def submit(self, chunk) -> list:
         """Dispatch one chunk; returns the list of chunk outputs that
         RESOLVED to make room (possibly empty, never more than one under
         steady state).  Raises on a terminally failed chunk (see class
         docstring) — the failed chunk is dropped, the rest of the
-        stream's order is unaffected."""
+        stream's order is unaffected, and any outputs that resolved
+        before the failure are buffered for the next ``submit``/
+        ``drain`` call (never discarded)."""
         import numpy as np
 
-        done = []
-        while len(self._inflight) >= self.depth:
-            pending = self._inflight[0]
-            out = self._resolve(pending)  # raises AFTER dropping the chunk
-            self._inflight.pop(0)
-            done.append(out)
-            self.chunks_out += 1
+        done = self._take_ready()
+        try:
+            while len(self._inflight) >= self.depth:
+                pending = self._inflight[0]
+                out = self._resolve(pending)  # raises AFTER dropping
+                self._inflight.pop(0)
+                done.append(out)
+                self.chunks_out += 1
+        except Exception:
+            self._ready = done  # deliver with the next call
+            raise
         pending = self.engine.push_async(np.asarray(chunk))
         self._inflight.append(pending)
         self.chunks_in += 1
         return done
 
     def drain(self) -> list:
-        """Resolve every in-flight chunk, oldest first."""
-        done = []
-        while self._inflight:
-            out = self._resolve(self._inflight[0])
-            self._inflight.pop(0)
-            done.append(out)
-            self.chunks_out += 1
+        """Resolve every in-flight chunk, oldest first.  On a terminal
+        failure the outputs resolved so far are buffered and delivered
+        by the next ``submit``/``drain`` call."""
+        done = self._take_ready()
+        try:
+            while self._inflight:
+                out = self._resolve(self._inflight[0])
+                self._inflight.pop(0)
+                done.append(out)
+                self.chunks_out += 1
+        except Exception:
+            self._ready = done
+            raise
         return done
 
     @property
@@ -326,6 +372,7 @@ class AsyncBankServer:
             "chunks_in": self.chunks_in,
             "chunks_out": self.chunks_out,
             "inflight": len(self._inflight),
+            "buffered": len(self._ready),
             "engine": eng_stats() if callable(eng_stats) else None,
         }
 
@@ -342,8 +389,12 @@ class ServeEngine:
         self._decode = jax.jit(make_decode_fn(cfg, mesh, rules))
 
     def generate(self, prompts, max_new_tokens: int = 16):
-        """prompts: (B, S) int tokens (equal length).  Greedy argmax."""
+        """prompts: (B, S) int tokens (equal length).  Greedy argmax.
+        ``max_new_tokens=0`` returns an empty (B, 0) array — the prefill
+        argmax is NOT an emitted token."""
         prompts = jnp.asarray(prompts, jnp.int32)
+        if max_new_tokens <= 0:
+            return jnp.zeros((prompts.shape[0], 0), jnp.int32)
         logits, state = self._prefill(self.params, {"tokens": prompts})
         tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         out = [tok]

@@ -1,0 +1,594 @@
+"""Multi-tenant session serving: many user streams over ONE compiled bank.
+
+`AsyncBankServer` double-buffers a single caller; this module is the
+production layer above it — a `BankSessionServer` that serves MANY
+concurrent user streams over one `BlmacProgram`:
+
+  * **Per-tenant filter selection.**  Each session opens on a subset of
+    the bank's filters.  `program.select(rows)` makes the slice cheap
+    (memoized array views registered content-addressed in the
+    `ProgramCache`) and gives every selection a stable content key — the
+    key a paused session's `TailSnapshot` is addressed to.
+  * **Continuous batching into shared slots.**  The server owns one
+    `FilterBankEngine` with ``n_slots`` channel lanes.  Sessions push
+    independently-paced chunks into per-session queues; each `step()`
+    packs every ready session's ``tail + queued`` buffer into the lanes
+    of ONE batched dispatch (several rounds when more sessions are ready
+    than there are lanes) and slices each tenant's rows / valid sample
+    range out of the result.  Bit-exactness versus a dedicated
+    per-session engine is structural: a lane is exactly the overlap-save
+    buffer `FilterBankEngine.push` would have built, lanes are
+    arithmetically independent, and everything is int32 — property-
+    tested across arbitrary interleavings in ``tests/test_sessions.py``.
+  * **Pause / resume.**  `session.pause()` flushes the session and
+    freezes its stream as a `TailSnapshot` keyed to the session's
+    *selection* subprogram (and stamped with the session id —
+    the compiler-side ``session`` field); `resume_session()` re-admits
+    it bit-exactly, in this process or after a restart.
+  * **Zero-downtime hot-swap.**  `session.swap_filters(rows)` retargets
+    one session (its queue is flushed under the old selection first, so
+    a swap never mixes output shapes); `server.swap_program(coeffs)`
+    recompiles through the content-addressed `ProgramCache`, builds and
+    warms the NEW engine while the OLD program keeps serving, then
+    drains and flips atomically — per-session tails carry over because
+    they are raw input history, not program state.
+  * **Admission control and eviction.**  `open_session` is gated by
+    `core.costmodel.predict_session_step_us`: a session is admitted only
+    while the predicted batching step stays inside ``step_budget_us``.
+    When over budget the server first parks idle sessions (LRU) —
+    parking is an internal snapshot, and a push to a parked session
+    transparently re-admits it — and only then rejects with
+    `AdmissionRejected`.
+  * **Observability.**  `serve_stats()` (per-session p50/p99 latency,
+    batch occupancy, queue depth, admission rejections, swap/eviction
+    counters) lands next to the compiler's `cache_stats()` and the
+    fault layer's `fault_stats()`.
+
+The server is host-side and single-threaded by design (like
+`AsyncBankServer`): callers interleave ``push`` / ``step`` / ``pull``
+from one thread, and determinism of the batching schedule is part of
+the bit-exactness contract.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+
+import numpy as np
+
+__all__ = ["AdmissionRejected", "BankSession", "BankSessionServer"]
+
+#: per-session latency samples kept for the p50/p99 estimators
+LATENCY_WINDOW = 256
+
+
+class AdmissionRejected(RuntimeError):
+    """`open_session` (or re-admission of a parked session) would push the
+    predicted batching step past the server's ``step_budget_us`` — or past
+    ``max_sessions`` — and no idle session could be evicted to make room.
+
+    Carries ``predicted_us`` (the step latency the admission would have
+    cost) and ``budget_us`` so callers can implement backpressure.
+    """
+
+    def __init__(self, msg: str, predicted_us: float, budget_us: float):
+        super().__init__(msg)
+        self.predicted_us = float(predicted_us)
+        self.budget_us = float(budget_us)
+
+
+class BankSession:
+    """One tenant stream: a filter selection plus overlap-save state.
+
+    Handles are created by `BankSessionServer.open_session` /
+    `resume_session`; all methods delegate to the server (which owns the
+    shared engine and the batching schedule).
+    """
+
+    def __init__(self, server: "BankSessionServer", session_id: str, rows):
+        self._server = server
+        self.session_id = session_id
+        self.rows = np.asarray(rows, np.int64)
+        self.subkey = server.program.select(self.rows).key
+        # overlap-save state (one lane): last ≤ taps−1 input samples
+        self.tail = np.zeros((1, 0), np.int32)
+        self.samples_in = 0
+        self.samples_out = 0
+        # independently-paced input: (chunk, enqueue_monotonic) pairs
+        self.queue: list = []
+        self.queued_samples = 0
+        # outputs computed but not yet pulled, each (len(rows), n_i)
+        self.outbox: list = []
+        self.latencies = deque(maxlen=LATENCY_WINDOW)
+        self.last_active = 0  # server step-sequence of last activity
+        self.parked = False
+        self.closed = False
+
+    # -- conveniences that delegate to the server ---------------------------
+
+    def push(self, chunk) -> None:
+        self._server.push(self, chunk)
+
+    def pull(self) -> np.ndarray:
+        return self._server.pull(self)
+
+    def pause(self):
+        return self._server.pause_session(self)
+
+    def swap_filters(self, rows) -> np.ndarray:
+        return self._server.swap_filters(self, rows)
+
+    def close(self) -> None:
+        self._server.close_session(self)
+
+    @property
+    def pending(self) -> int:
+        """Samples queued or tail-buffered but not yet served."""
+        return self.queued_samples + self.tail.shape[1]
+
+
+class BankSessionServer:
+    """Serve many concurrent filter-selection streams over one program.
+
+    Parameters
+    ----------
+    program : `repro.compiler.BlmacProgram` or (B, taps) int array
+        The compiled bank every session selects from (arrays are
+        compiled via the content-addressed `compile_bank`).
+    n_slots : int
+        Channel lanes of the shared engine — sessions batched per
+        dispatch round.  More ready sessions than slots simply take
+        ceil(ready / n_slots) rounds per step.
+    step_budget_us : float | None
+        Admission budget: a session is admitted only while
+        `predict_session_step_us(dispatch_us, active + 1, n_slots)`
+        stays ≤ this.  None disables cost-model admission control.
+    max_sessions : int | None
+        Hard cap on concurrently *active* (non-parked) sessions.
+    auto_step : bool
+        When True (default) every `push` runs a batching step, so a
+        single-caller loop behaves like `FilterBankEngine.push`.  Set
+        False to drive `step()` yourself and batch many sessions' pushes
+        into shared rounds (what the benchmark and a real event loop do).
+    mode, tile, interpret, chunk_hint
+        Forwarded to the shared `FilterBankEngine`.
+    """
+
+    def __init__(
+        self,
+        program,
+        n_slots: int = 8,
+        step_budget_us: float | None = None,
+        max_sessions: int | None = None,
+        auto_step: bool = True,
+        mode: str = "auto",
+        tile: int | None = None,
+        interpret: bool | None = None,
+        chunk_hint: int = 2048,
+    ):
+        from ..compiler import BlmacProgram, compile_bank
+        from ..filters import FilterBankEngine
+
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if not isinstance(program, BlmacProgram):
+            program = compile_bank(np.atleast_2d(np.asarray(program)))
+        self.program = program
+        self.n_slots = int(n_slots)
+        self.step_budget_us = step_budget_us
+        self.max_sessions = max_sessions
+        self.auto_step = bool(auto_step)
+        self._engine_kw = dict(
+            mode=mode, tile=tile, interpret=interpret, chunk_hint=chunk_hint
+        )
+        self.engine = FilterBankEngine(
+            program, channels=self.n_slots, **self._engine_kw
+        )
+        self.sessions: dict = {}  # session_id -> BankSession (incl. parked)
+        self._ids = itertools.count()
+        self._seq = 0  # monotone activity clock for LRU decisions
+        # counters for serve_stats()
+        self.steps = 0
+        self.rounds = 0
+        self.chunks_in = 0
+        self.chunks_out = 0
+        self.samples_in = 0
+        self.samples_out = 0
+        self.admission_rejections = 0
+        self.evictions = 0
+        self.filter_swaps = 0
+        self.program_swaps = 0
+        self._lane_fill = 0  # lanes carrying a session, across all rounds
+
+    # -- admission / eviction -----------------------------------------------
+
+    def _dispatch_us(self) -> float:
+        """Per-round dispatch latency estimate feeding admission control:
+        the shared engine's autotuner verdict when there is one, else the
+        coarse fixed-overhead floor of a forced-mode scheduled dispatch."""
+        from ..core.costmodel import PALLAS_CALL_US, STEP_US
+
+        plan = getattr(self.engine, "dispatch_plan", None)
+        if plan is not None:
+            return float(plan.predicted_us)
+        return PALLAS_CALL_US + STEP_US
+
+    def _active(self) -> int:
+        return sum(
+            1 for s in self.sessions.values() if not s.parked and not s.closed
+        )
+
+    def predicted_step_us(self, extra_sessions: int = 0) -> float:
+        """Modelled latency of one batching step with the current active
+        population plus ``extra_sessions`` hypothetical admissions."""
+        from ..core.costmodel import predict_session_step_us
+
+        return predict_session_step_us(
+            self._dispatch_us(), self._active() + extra_sessions, self.n_slots
+        )
+
+    def _park_idle_lru(self) -> bool:
+        """Park the least-recently-active idle session to make room.
+        Parking is internal state only (the lane model has no per-session
+        device residency), so a parked session's handle stays valid and
+        its next `push` re-admits it transparently."""
+        idle = [
+            s for s in self.sessions.values()
+            if not s.parked and not s.closed and s.queued_samples == 0
+        ]
+        if not idle:
+            return False
+        victim = min(idle, key=lambda s: s.last_active)
+        victim.parked = True
+        self.evictions += 1
+        return True
+
+    def _admit(self, what: str) -> None:
+        """Gate one admission (open / resume / un-park) on the cost model,
+        parking idle LRU sessions until the predicted step fits."""
+        while True:
+            over_cap = (
+                self.max_sessions is not None
+                and self._active() + 1 > self.max_sessions
+            )
+            predicted = self.predicted_step_us(extra_sessions=1)
+            over_budget = (
+                self.step_budget_us is not None
+                and predicted > self.step_budget_us
+            )
+            if not over_cap and not over_budget:
+                return
+            if self._park_idle_lru():
+                continue
+            self.admission_rejections += 1
+            budget = (
+                float(self.step_budget_us)
+                if self.step_budget_us is not None
+                else float("inf")
+            )
+            raise AdmissionRejected(
+                f"{what}: predicted step {predicted:.0f}us exceeds budget "
+                f"{budget:.0f}us (active={self._active()}, "
+                f"slots={self.n_slots}) and no idle session to evict",
+                predicted_us=predicted,
+                budget_us=budget,
+            )
+
+    def _readmit(self, session: BankSession) -> None:
+        self._admit(f"re-admit session {session.session_id}")
+        session.parked = False
+
+    # -- session lifecycle ---------------------------------------------------
+
+    def open_session(self, rows, session_id: str | None = None) -> BankSession:
+        """Open a stream serving ``rows`` of the bank (original filter
+        indices).  Warms the selection subprogram through the
+        `ProgramCache` and runs admission control before the session can
+        occupy a lane."""
+        rows = np.asarray(rows, np.int64).ravel()
+        if rows.size == 0:
+            raise ValueError("a session must select at least one filter")
+        if rows.min() < 0 or rows.max() >= self.program.n_filters:
+            raise ValueError(
+                f"filter rows out of range for a {self.program.n_filters}-"
+                f"filter bank: {rows}"
+            )
+        if session_id is None:
+            session_id = f"s{next(self._ids)}"
+        if session_id in self.sessions:
+            raise ValueError(f"session id {session_id!r} already open")
+        self._admit(f"open session {session_id}")
+        s = BankSession(self, session_id, rows)
+        self._seq += 1
+        s.last_active = self._seq
+        self.sessions[session_id] = s
+        return s
+
+    def close_session(self, session: BankSession) -> None:
+        session.closed = True
+        self.sessions.pop(session.session_id, None)
+
+    def pause_session(self, session: BankSession):
+        """Flush the session, freeze its stream as a `TailSnapshot`
+        addressed to its *selection* subprogram and stamped with the
+        session id, and close it (freeing its admission slot).  The
+        snapshot (plus the same ``rows``) is everything
+        `resume_session` needs — here or in another process.  Outputs
+        computed by the flush stay in the handle's outbox: `pull` works
+        on a closed session, so nothing is lost if the caller pauses
+        before draining."""
+        from ..compiler.state import TailSnapshot
+
+        self._check_open(session)
+        if session.queued_samples:
+            self.step()
+        snap = TailSnapshot(
+            program_key=session.subkey,
+            channels=1,
+            samples_in=session.samples_in,
+            samples_out=session.samples_out,
+            tail=session.tail.copy(),
+            session=session.session_id,
+        )
+        self.close_session(session)
+        return snap
+
+    def resume_session(
+        self, snapshot, rows, session_id: str | None = None
+    ) -> BankSession:
+        """Re-admit a paused stream bit-exactly.  The snapshot must be
+        addressed to `program.select(rows)` — resuming under a different
+        selection (or a different program) is a loud ValueError."""
+        rows = np.asarray(rows, np.int64).ravel()
+        expect = self.program.select(rows).key
+        if snapshot.program_key != expect:
+            raise ValueError(
+                f"snapshot belongs to selection {snapshot.program_key[:12]}…,"
+                f" rows {rows.tolist()} of this program are {expect[:12]}…"
+            )
+        if int(snapshot.channels) != 1:
+            raise ValueError(
+                f"session snapshots are single-lane, got "
+                f"{snapshot.channels} channels"
+            )
+        s = self.open_session(
+            rows, session_id=session_id or snapshot.session or None
+        )
+        s.tail = np.asarray(snapshot.tail, np.int32).copy()
+        s.samples_in = int(snapshot.samples_in)
+        s.samples_out = int(snapshot.samples_out)
+        return s
+
+    # -- hot swap ------------------------------------------------------------
+
+    def swap_filters(self, session: BankSession, rows) -> np.ndarray:
+        """Retarget one session to a new filter selection.  Queued input
+        is flushed under the OLD selection first (a swap never mixes
+        output shapes in the outbox); returns those final old-selection
+        outputs.  The overlap-save tail carries over — it is raw input
+        history, selection-independent — so the new selection's stream
+        continues gaplessly."""
+        self._check_open(session)
+        if session.queued_samples:
+            self.step()
+        out = self.pull(session)
+        rows = np.asarray(rows, np.int64).ravel()
+        if rows.size == 0:
+            raise ValueError("a session must select at least one filter")
+        if rows.min() < 0 or rows.max() >= self.program.n_filters:
+            raise ValueError(
+                f"filter rows out of range for a {self.program.n_filters}-"
+                f"filter bank: {rows}"
+            )
+        session.rows = rows
+        session.subkey = self.program.select(rows).key  # warm via cache
+        self.filter_swaps += 1
+        return out
+
+    def swap_program(self, coeffs, spec=None) -> None:
+        """Zero-downtime server-wide program swap.  The replacement is
+        compiled through the content-addressed `ProgramCache`
+        (recompiling identical content is a cache hit) and its engine is
+        built and warmed while the OLD program keeps serving; only then
+        are all sessions drained under the old program and the engine
+        flipped atomically.  Tap count must match — per-session tails
+        are taps−1 samples of raw input history and carry over unchanged,
+        which is what makes the swap seamless mid-stream."""
+        from ..compiler import BlmacProgram, compile_bank
+        from ..filters import FilterBankEngine
+
+        if isinstance(coeffs, BlmacProgram):
+            new_prog = coeffs
+        else:
+            new_prog = compile_bank(np.atleast_2d(np.asarray(coeffs)), spec)
+        if new_prog.taps != self.program.taps:
+            raise ValueError(
+                f"cannot hot-swap a {new_prog.taps}-tap program into a "
+                f"{self.program.taps}-tap stream (tails would be invalid)"
+            )
+        for s in self.sessions.values():
+            if s.rows.max() >= new_prog.n_filters:
+                raise ValueError(
+                    f"session {s.session_id} selects row {int(s.rows.max())}"
+                    f" but the new program has {new_prog.n_filters} filters"
+                )
+        # build + warm the new engine while the old one still serves
+        new_engine = FilterBankEngine(
+            new_prog, channels=self.n_slots, **self._engine_kw
+        )
+        # drain every queued chunk under the OLD program, then flip
+        self.step()
+        self.program = new_prog
+        self.engine = new_engine
+        for s in self.sessions.values():
+            s.subkey = new_prog.select(s.rows).key
+        self.program_swaps += 1
+
+    # -- streaming -----------------------------------------------------------
+
+    def _check_open(self, session: BankSession) -> None:
+        if session.closed or session.session_id not in self.sessions:
+            raise ValueError(f"session {session.session_id!r} is closed")
+
+    def push(self, session: BankSession, chunk) -> None:
+        """Enqueue (n,) samples on one session's independently-paced
+        stream.  Pushing to a parked session re-admits it (possibly
+        parking another idle session).  With ``auto_step`` the push also
+        runs a batching step, so outputs land in the outbox immediately."""
+        self._check_open(session)
+        if session.parked:
+            self._readmit(session)
+        chunk = np.asarray(chunk)
+        if chunk.ndim == 2 and chunk.shape[0] == 1:
+            chunk = chunk[0]
+        if chunk.ndim != 1:
+            raise ValueError(
+                f"session chunks are 1-D sample vectors, got {chunk.shape}"
+            )
+        chunk = chunk.astype(np.int32, copy=False)
+        self._seq += 1
+        session.last_active = self._seq
+        if chunk.shape[0]:
+            session.queue.append((chunk, time.monotonic()))
+            session.queued_samples += int(chunk.shape[0])
+            session.samples_in += int(chunk.shape[0])
+            self.chunks_in += 1
+            self.samples_in += int(chunk.shape[0])
+        if self.auto_step:
+            self.step()
+
+    def pull(self, session: BankSession) -> np.ndarray:
+        """Drain a session's computed outputs as one gapless
+        (len(rows), n) int32 array (n may be 0)."""
+        if not session.outbox:
+            return np.zeros((session.rows.size, 0), np.int32)
+        out, session.outbox = session.outbox, []
+        return np.concatenate(out, axis=1) if len(out) > 1 else out[0]
+
+    def _ready_sessions(self) -> list:
+        """Consume priming-only queues into tails (no kernel work) and
+        return the sessions that can produce ≥ 1 output, oldest queued
+        chunk first (deterministic batching order)."""
+        ready = []
+        for s in self.sessions.values():
+            if s.parked or s.closed or not s.queue:
+                continue
+            total = s.tail.shape[1] + s.queued_samples
+            if total < self.program.taps:  # still priming: absorb, no lane
+                data = np.concatenate([c for c, _ in s.queue])
+                now = time.monotonic()
+                for _, ts in s.queue:
+                    s.latencies.append(now - ts)
+                self.chunks_out += len(s.queue)
+                s.queue = []
+                s.queued_samples = 0
+                s.tail = np.concatenate([s.tail, data[None, :]], axis=1)
+                continue
+            ready.append(s)
+        ready.sort(key=lambda s: s.queue[0][1])
+        return ready
+
+    def step(self) -> int:
+        """Run one batching step: serve EVERY ready session, packing up
+        to ``n_slots`` of them per dispatch round.  Returns the number of
+        sessions served.  Idempotent when nothing is queued."""
+        ready = self._ready_sessions()
+        if not ready:
+            return 0
+        self.steps += 1
+        taps = self.program.taps
+        served = 0
+        for r0 in range(0, len(ready), self.n_slots):
+            batch = ready[r0:r0 + self.n_slots]
+            lane_bufs = []
+            for s in batch:
+                data = np.concatenate([c for c, _ in s.queue])
+                lane_bufs.append(
+                    np.concatenate([s.tail[0], data])
+                )
+            lane_len = max(b.shape[0] for b in lane_bufs)
+            buf = np.zeros((self.n_slots, lane_len), np.int32)
+            for lane, b in enumerate(lane_bufs):
+                buf[lane, : b.shape[0]] = b
+            y = self.engine.apply_lanes(buf)  # (B_full, n_slots, lane_len-taps+1)
+            self.rounds += 1
+            self._lane_fill += len(batch)
+            now = time.monotonic()
+            for lane, s in enumerate(batch):
+                valid = lane_bufs[lane].shape[0]
+                n_out = valid - taps + 1
+                s.outbox.append(
+                    np.ascontiguousarray(y[s.rows, lane, :n_out])
+                )
+                s.tail = lane_bufs[lane][None, valid - (taps - 1):] \
+                    if taps > 1 else np.zeros((1, 0), np.int32)
+                s.samples_out += n_out
+                self.samples_out += n_out
+                for _, ts in s.queue:
+                    s.latencies.append(now - ts)
+                self.chunks_out += len(s.queue)
+                s.queue = []
+                s.queued_samples = 0
+                self._seq += 1
+                s.last_active = self._seq
+                served += 1
+        return served
+
+    def flush(self) -> int:
+        """Serve everything currently queued (alias for one `step`)."""
+        return self.step()
+
+    # -- observability -------------------------------------------------------
+
+    def serve_stats(self) -> dict:
+        """Serving-layer observability, one JSON-able dict — the session
+        analogue of the compiler's `cache_stats()` and the fault layer's
+        `fault_stats()`."""
+
+        def _pct(samples, q):
+            return float(np.percentile(np.asarray(samples), q)) * 1e3
+
+        all_lat = []
+        per_session = {}
+        for s in self.sessions.values():
+            lat = list(s.latencies)
+            all_lat.extend(lat)
+            per_session[s.session_id] = {
+                "rows": int(s.rows.size),
+                "parked": bool(s.parked),
+                "queue_depth": len(s.queue),
+                "queued_samples": int(s.queued_samples),
+                "samples_in": int(s.samples_in),
+                "samples_out": int(s.samples_out),
+                "latency_p50_ms": _pct(lat, 50) if lat else None,
+                "latency_p99_ms": _pct(lat, 99) if lat else None,
+            }
+        return {
+            "sessions": len(self.sessions),
+            "active": self._active(),
+            "parked": sum(1 for s in self.sessions.values() if s.parked),
+            "slots": self.n_slots,
+            "steps": self.steps,
+            "rounds": self.rounds,
+            "occupancy": (
+                self._lane_fill / (self.rounds * self.n_slots)
+                if self.rounds else 0.0
+            ),
+            "queue_depth": sum(
+                len(s.queue) for s in self.sessions.values()
+            ),
+            "chunks_in": self.chunks_in,
+            "chunks_out": self.chunks_out,
+            "samples_in": self.samples_in,
+            "samples_out": self.samples_out,
+            "admission_rejections": self.admission_rejections,
+            "evictions": self.evictions,
+            "filter_swaps": self.filter_swaps,
+            "program_swaps": self.program_swaps,
+            "predicted_step_us": self.predicted_step_us(),
+            "step_budget_us": self.step_budget_us,
+            "latency_p50_ms": _pct(all_lat, 50) if all_lat else None,
+            "latency_p99_ms": _pct(all_lat, 99) if all_lat else None,
+            "per_session": per_session,
+        }

@@ -308,6 +308,69 @@ def test_server_deadline_expires_before_the_retry_budget():
     assert server.inflight == 0  # dropped, never a hang
 
 
+def test_server_delivers_resolved_outputs_when_a_later_chunk_fails():
+    # regression: drain() used to DISCARD outputs already resolved in
+    # its loop when a younger chunk then failed terminally — chunk 0's
+    # outputs died with chunk 1's RetriesExhausted
+    q = _qbank(5)
+    inj = FaultInjector().fail_push(0, at_chunk=1, times=10)
+    eng = ShardedFilterBankEngine(q, fault_injector=inj)
+    server = AsyncBankServer(eng, depth=2, max_retries=1, backoff_s=1e-4)
+    from repro.distributed.faultbank import RetriesExhausted
+
+    x = _stream(15, 2 * 500)
+    server.submit(x[:500])
+    server.submit(x[500:])
+    with pytest.raises(RetriesExhausted):
+        server.drain()
+    # chunk 0 resolved before chunk 1 failed: buffered, not lost
+    assert server.fault_stats()["buffered"] == 1
+    rest = server.drain()
+    assert len(rest) == 1 and server.fault_stats()["buffered"] == 0
+    ref = fir_bit_layers_batch(x, q)[:, 0, :]
+    assert np.array_equal(rest[0][:, 0, :], ref[:, :500 - TAPS + 1])
+
+
+def test_server_backoff_never_sleeps_past_the_deadline():
+    # regression: uncapped exponential backoff could sleep an arbitrary
+    # multiple of deadline_s before re-checking — a 10 s backoff against
+    # a 50 ms deadline used to stall the stream for seconds
+    import time
+
+    inj = FaultInjector().fail_push(0, at_chunk=0, times=100)
+    eng = ShardedFilterBankEngine(_qbank(4), fault_injector=inj)
+    server = AsyncBankServer(eng, depth=1, max_retries=1000,
+                             backoff_s=10.0, deadline_s=0.05)
+    from repro.distributed.faultbank import DeadlineExceeded
+
+    server.submit(_stream(16, 500))
+    t0 = time.monotonic()
+    with pytest.raises(DeadlineExceeded):
+        server.drain()
+    assert time.monotonic() - t0 < 2.0  # was ≥ 10 s before the clamp
+    assert server.deadline_expired == 1 and server.inflight == 0
+
+
+def test_server_backoff_is_capped(monkeypatch):
+    import time
+
+    sleeps = []
+    monkeypatch.setattr(time, "sleep", lambda s: sleeps.append(s))
+    inj = FaultInjector().fail_push(0, at_chunk=0, times=100)
+    eng = ShardedFilterBankEngine(_qbank(4), fault_injector=inj)
+    server = AsyncBankServer(eng, depth=1, max_retries=6,
+                             backoff_s=1e-3, max_backoff_s=4e-3)
+    from repro.distributed.faultbank import RetriesExhausted
+
+    server.submit(_stream(17, 400))
+    with pytest.raises(RetriesExhausted):
+        server.drain()
+    assert sleeps[:3] == [1e-3, 2e-3, 4e-3]  # doubling…
+    assert max(sleeps) <= 4e-3  # …until the cap bites
+    with pytest.raises(ValueError):
+        AsyncBankServer(eng, max_backoff_s=0.0)
+
+
 def test_server_fault_stats_are_json_ready():
     eng = ShardedFilterBankEngine(_qbank(4), fault_injector=FaultInjector())
     server = AsyncBankServer(eng)

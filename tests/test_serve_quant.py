@@ -24,6 +24,18 @@ def test_error_decreases_and_engine_runs():
     assert out.shape == (2, 4)
 
 
+def test_generate_zero_new_tokens_is_empty():
+    # boundary: max_new_tokens=0 must not emit the prefill argmax
+    cfg = get_config("qwen2.5-3b").reduced(n_layers=2, vocab_size=256)
+    params = init_params(model_decls(cfg), jax.random.key(0))
+    eng = ServeEngine(cfg, params, cache_len=64)
+    prompts = np.zeros((3, 8), np.int32)
+    out = np.asarray(eng.generate(prompts, max_new_tokens=0))
+    assert out.shape == (3, 0) and out.dtype == np.int32
+    # and one token really is one token (the old off-by-one boundary)
+    assert np.asarray(eng.generate(prompts, max_new_tokens=1)).shape == (3, 1)
+
+
 def test_greedy_tokens_mostly_stable_at_p4():
     cfg = get_config("qwen2.5-3b").reduced(n_layers=2, vocab_size=256)
     params = init_params(model_decls(cfg), jax.random.key(1))
