@@ -24,6 +24,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from ..core.io import fsync_dir, fsync_file
+
 _STEP_RE = re.compile(r"^step_(\d{9})$")
 
 
@@ -70,9 +72,9 @@ def save_checkpoint(root: str, step: int, tree: Any, keep: int = 3,
         manifest["leaves"][key] = arr_meta
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
-        f.flush()
-        os.fsync(f.fileno())
+        fsync_file(f)
     os.rename(tmp, final)  # atomic commit
+    fsync_dir(root)
     _gc(root, keep)
     return final
 

@@ -28,11 +28,11 @@ from __future__ import annotations
 
 import hashlib
 import json
-import os
 from dataclasses import dataclass
 
 import numpy as np
 
+from ..core.io import atomic_write, check_format_header
 from ..core.csd import (assert_int32_bound, csd_decode, csd_digits,
                         layer_occupancy, occupancy_signatures, pack_trits,
                         packed_pulse_counts, require_type1, unpack_trits)
@@ -410,16 +410,13 @@ class BlmacProgram:
                 "n_layers": self.spec.n_layers,
             },
         }
-        tmp = f"{path}.tmp"
-        with open(tmp, "wb") as f:
-            np.savez(
-                f,
-                header=np.array(json.dumps(header)),
-                qbank=self.qbank,
-                exponents=self.exponents,
-                packed=self.packed,
-            )
-        os.replace(tmp, path)
+        atomic_write(path, lambda f: np.savez(
+            f,
+            header=np.array(json.dumps(header)),
+            qbank=self.qbank,
+            exponents=self.exponents,
+            packed=self.packed,
+        ))
 
     @classmethod
     def load(cls, path) -> "BlmacProgram":
@@ -438,16 +435,11 @@ class BlmacProgram:
         try:
             with np.load(path, allow_pickle=False) as z:
                 header = json.loads(str(z["header"][()]))
-                if header.get("kind") != "blmac_program":
-                    raise ProgramFormatError(
-                        f"{path}: not a BLMAC program file"
-                    )
-                version = header.get("format_version")
-                if version != PROGRAM_FORMAT_VERSION:
-                    raise ProgramFormatError(
-                        f"{path}: format version {version} != supported "
-                        f"{PROGRAM_FORMAT_VERSION} — recompile the bank"
-                    )
+                check_format_header(
+                    header, kind="blmac_program",
+                    version=PROGRAM_FORMAT_VERSION, path=path,
+                    error_cls=ProgramFormatError, label="BLMAC program",
+                )
                 qbank = np.ascontiguousarray(z["qbank"], np.int64)
                 exponents = np.ascontiguousarray(z["exponents"], np.int64)
                 packed = np.ascontiguousarray(z["packed"], np.uint32)

@@ -22,9 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import os
 
 import numpy as np
+
+from ..core.io import atomic_write, check_format_header
 
 __all__ = ["STATE_FORMAT_VERSION", "SnapshotFormatError", "TailSnapshot"]
 
@@ -61,7 +62,7 @@ class TailSnapshot:
     session: str = ""
 
     def save(self, path) -> None:
-        """Atomic npz write (tmp + rename), mirroring
+        """Atomic npz write (`repro.core.io.atomic_write`), mirroring
         `BlmacProgram.save` — a killed process never leaves a truncated
         snapshot behind."""
         header = {
@@ -73,14 +74,11 @@ class TailSnapshot:
             "samples_out": int(self.samples_out),
             "session": str(self.session),
         }
-        tmp = f"{path}.tmp"
-        with open(tmp, "wb") as f:
-            np.savez(
-                f,
-                header=np.array(json.dumps(header)),
-                tail=np.asarray(self.tail, np.int32),
-            )
-        os.replace(tmp, path)
+        atomic_write(path, lambda f: np.savez(
+            f,
+            header=np.array(json.dumps(header)),
+            tail=np.asarray(self.tail, np.int32),
+        ))
 
     @classmethod
     def load(cls, path) -> "TailSnapshot":
@@ -89,16 +87,11 @@ class TailSnapshot:
         try:
             with np.load(path, allow_pickle=False) as z:
                 header = json.loads(str(z["header"][()]))
-                if header.get("kind") != "blmac_tail_snapshot":
-                    raise SnapshotFormatError(
-                        f"{path}: not a tail-snapshot file"
-                    )
-                version = header.get("format_version")
-                if version != STATE_FORMAT_VERSION:
-                    raise SnapshotFormatError(
-                        f"{path}: format version {version} != supported "
-                        f"{STATE_FORMAT_VERSION}"
-                    )
+                check_format_header(
+                    header, kind="blmac_tail_snapshot",
+                    version=STATE_FORMAT_VERSION, path=path,
+                    error_cls=SnapshotFormatError, label="tail-snapshot",
+                )
                 tail = np.ascontiguousarray(z["tail"], np.int32)
         except SnapshotFormatError:
             raise

@@ -291,26 +291,35 @@ def predict_recovery_us(
 # not predict wall time.
 
 SESSION_LANE_US = 45.0  # per channel lane staged + sliced, per round
+JOURNAL_APPEND_US = 15.0  # per chunk/pull WAL record framed + written
+JOURNAL_SYNC_US = 400.0  # per group-commit fsync at the end of a step
 
 
 def predict_session_step_us(
     dispatch_us: float,
     n_active: int,
     n_slots: int,
+    journal_us: float = 0.0,
 ) -> float:
     """Modelled latency of one session-server batching step with
     ``n_active`` sessions packed into ``n_slots`` shared lanes:
     ceil(n_active / n_slots) rounds, each a full ``dispatch_us`` bank
     dispatch (from `predict_specialized_us` / `predict_scheduled_us`)
-    plus the per-lane staging cost of every slot in the round.  The
-    server admits a session only while the predicted step stays inside
-    its latency budget."""
+    plus the per-lane staging cost of every slot in the round, plus the
+    step's flat write-ahead-journal bill (``journal_us``, built by the
+    server from `JOURNAL_APPEND_US` / `JOURNAL_SYNC_US` when a journal
+    is attached).  ``dispatch_us`` is the CURRENT engine plan's
+    prediction — on a sharded engine that plan is rebuilt by every
+    fault recovery, so admission is automatically priced against the
+    degraded mesh.  The server admits a session only while the
+    predicted step stays inside its latency budget."""
     if n_slots < 1:
         raise ValueError("n_slots must be >= 1")
     if n_active <= 0:
         return 0.0
     rounds = -(-int(n_active) // int(n_slots))
-    return rounds * (float(dispatch_us) + n_slots * SESSION_LANE_US)
+    return rounds * (float(dispatch_us) + n_slots * SESSION_LANE_US) \
+        + float(journal_us)
 
 
 def machine_cycles_batch(

@@ -585,6 +585,60 @@ class ShardedFilterBankEngine:
     def __call__(self, chunk) -> np.ndarray:
         return self.push(chunk)
 
+    def apply_lanes(self, buf) -> np.ndarray:
+        """Stateless one-shot bank application over ``channels`` lanes —
+        the sharded twin of `FilterBankEngine.apply_lanes`, which is the
+        dispatch surface `repro.serving.BankSessionServer` batches
+        tenants through.  ``buf`` is (C, n) int samples with
+        ``n >= taps``; returns the full (B, C, n − taps + 1) output
+        without touching the engine's overlap-save tail or stream
+        counters.
+
+        The dispatch goes through the SAME fault path as `push`: each
+        lane buffer rides a `PendingChunk` whose replay material is the
+        buffer itself (an empty tail snapshot — the call is stateless),
+        so a shard lost / timed out / corrupted mid-call triggers the
+        normal re-partition + bit-exact replay and the call returns the
+        recovered result.  A `TransientShardError` propagates to the
+        caller (the session server's bounded retry), after invalidating
+        the pending so no stale dispatch leaks into ``_inflight``."""
+        from ..compiler.state import TailSnapshot
+
+        buf = np.asarray(buf, np.int32)
+        if buf.ndim != 2 or buf.shape[0] != self.channels:
+            raise ValueError(
+                f"expected ({self.channels}, n) lane buffer, "
+                f"got shape {buf.shape}"
+            )
+        if buf.shape[1] < self.taps:
+            raise ValueError(
+                f"lane buffer has {buf.shape[1]} samples, "
+                f"need >= taps ({self.taps})"
+            )
+        idx = self._chunk_idx
+        self._chunk_idx += 1
+        # empty-tail snapshot + the raw buffer == complete replay
+        # material: `_replay_one` rebuilds concat(tail, chunk) == buf
+        snap = TailSnapshot(
+            program_key=self.program.key, channels=self.channels,
+            samples_in=0, samples_out=0,
+            tail=np.zeros((self.channels, 0), np.int32),
+        )
+        n = buf.shape[1]
+        n_out = n - self.taps + 1
+        outs, offsets = self._dispatch_shards(buf, n, idx)
+        p = PendingChunk(
+            self, outs, self.partition.inv, n_out, offsets,
+            self.n_filters, self.channels,
+            snapshot=snap, chunk=buf, chunk_idx=idx,
+        )
+        self._inflight.append(p)
+        try:
+            return p.result()
+        except Exception:
+            p.invalidate()
+            raise
+
     def reset(self) -> None:
         """Drop all buffered history (start a new stream).  Outstanding
         `PendingChunk`s are INVALIDATED — their ``result()`` raises

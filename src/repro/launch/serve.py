@@ -32,6 +32,15 @@ selection, continuously batched into the shared lanes of ONE
 Exercises one mid-run `swap_filters` hot-swap and one pause/resume,
 spot-checks a session against the numpy oracle, and prints the
 `serve_stats()` surface (occupancy, queue depth, p50/p99 latency).
+
+``--journal-path wal/`` makes the session server crash-safe: every
+push/pull/registry change is written ahead to a CRC-framed journal and
+`BankSessionServer.recover(path)` rebuilds every tenant bit-exactly
+after a SIGKILL (see ``examples/session_recovery.py`` for the
+kill-and-resume demo).  ``--bank-shards K`` runs the same session layer
+ON TOP of a K-way `ShardedFilterBankEngine` (sessions × shards): lane
+dispatches go through the sharded mesh and inherit its shard-loss
+recovery.
 """
 from __future__ import annotations
 
@@ -49,12 +58,27 @@ def serve_sessions(args) -> None:
 
     n, n_sessions = args.fir_bank, args.sessions
     program = compile_bank(spread_lowpass_qbank(n, args.taps))
+    engine = None
+    if args.bank_shards:
+        from repro.filters import ShardedFilterBankEngine
+
+        engine = ShardedFilterBankEngine(
+            program,
+            channels=args.slots,
+            n_bank_shards=args.bank_shards,
+            chunk_hint=args.chunk,
+        )
+        print(f"[serve] sessions × shards: {engine.describe()}")
     server = BankSessionServer(
         program,
         n_slots=args.slots,
         chunk_hint=args.chunk,
         auto_step=False,
+        engine=engine,
+        journal=args.journal_path or None,
     )
+    if args.journal_path:
+        print(f"[serve] journaling session state to {args.journal_path}")
     rng = np.random.default_rng(0)
     # each session selects a distinct contiguous row slice of the bank
     per = max(1, n // n_sessions)
@@ -119,6 +143,12 @@ def serve_sessions(args) -> None:
     assert np.array_equal(got, ref), "session stream mismatch vs oracle"
     print(f"[serve] session {check} bit-exact vs numpy oracle "
           f"({got.shape[1]} samples × {got.shape[0]} filters)")
+    if stats.get("journal"):
+        j = stats["journal"]
+        print(f"[serve] journal: {j['appends']} appends, {j['syncs']} "
+              f"fsyncs, {j['rotations']} rotations, live segment "
+              f"{j['segment_bytes']} bytes at {j['path']}")
+    server.close()
 
 
 def serve_fir_bank(args) -> None:
@@ -207,6 +237,13 @@ def main() -> None:
                          "stream")
     ap.add_argument("--slots", type=int, default=8,
                     help="shared batching lanes of the session server")
+    ap.add_argument("--journal-path", default="",
+                    help="write-ahead session journal directory (sessions "
+                         "mode): makes the server crash-safe via "
+                         "BankSessionServer.recover()")
+    ap.add_argument("--bank-shards", type=int, default=0, metavar="K",
+                    help="run the session lanes on a K-way sharded filter "
+                         "bank engine (sessions mode, 0 = plain engine)")
     ap.add_argument("--program-path", default="",
                     help="compiled-program cache file (fir-bank mode): "
                          "load it to warm-start, write it after compiling")

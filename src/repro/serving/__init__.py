@@ -6,6 +6,7 @@ from .engine import (
     make_decode_fn,
     make_prefill_fn,
 )
+from .journal import JournalFormatError, SessionJournal
 from .sessions import AdmissionRejected, BankSession, BankSessionServer
 
 __all__ = [
@@ -13,6 +14,8 @@ __all__ = [
     "AsyncBankServer",
     "BankSession",
     "BankSessionServer",
+    "JournalFormatError",
+    "SessionJournal",
     "ServeEngine",
     "abstract_caches",
     "cache_pspecs",

@@ -39,10 +39,33 @@ concurrent user streams over one `BlmacProgram`:
     parking is an internal snapshot, and a push to a parked session
     transparently re-admits it — and only then rejects with
     `AdmissionRejected`.
+  * **Sessions × shards.**  The shared lanes can run on a
+    `repro.filters.ShardedFilterBankEngine` of the same program (pass
+    ``engine=``): `apply_lanes` dispatches through the sharded engine's
+    `select()` subprograms, so a shard lost / timed out / corrupted
+    mid-`step()` triggers the PR 6 machinery — re-partition over the
+    survivors, bit-exact replay — **inside the call**, with per-tenant
+    fault isolation: only the sessions packed into the failed dispatch
+    round ride the replay (no other session's output is reordered or
+    dropped), transient shard errors get a bounded in-step retry, and
+    `fault_stats()` attributes faults per session.  Admission control
+    reads the ENGINE'S LIVE PLAN, which every recovery rebuilds, so
+    after a shard loss the server prices steps against the degraded
+    mesh (and `serve_stats()['degraded']` flips once the engine has
+    fallen back to the 1×1 plain lowering).
+  * **Durability.**  Attach a `repro.serving.journal.SessionJournal`
+    (``journal=`` path) and every state transition — session registry,
+    pushed chunks, delivered-sample watermarks, cadenced quiescent-point
+    snapshots — is written ahead to a CRC-framed segment log.
+    `BankSessionServer.recover(path, program)` rebuilds every session
+    bit-exactly after a `SIGKILL`: torn tail records are truncated,
+    journaled chunks replay from the last snapshot, and regenerated
+    output below each session's delivered watermark is trimmed so
+    clients see no duplicates and no gaps.
   * **Observability.**  `serve_stats()` (per-session p50/p99 latency,
     batch occupancy, queue depth, admission rejections, swap/eviction
-    counters) lands next to the compiler's `cache_stats()` and the
-    fault layer's `fault_stats()`.
+    counters, degraded flag, journal counters) lands next to the
+    compiler's `cache_stats()` and the fault layer's `fault_stats()`.
 
 The server is host-side and single-threaded by design (like
 `AsyncBankServer`): callers interleave ``push`` / ``step`` / ``pull``
@@ -52,6 +75,7 @@ the bit-exactness contract.
 from __future__ import annotations
 
 import itertools
+import os
 import time
 from collections import deque
 
@@ -104,6 +128,16 @@ class BankSession:
         self.last_active = 0  # server step-sequence of last activity
         self.parked = False
         self.closed = False
+        # durability / fault-attribution state
+        self.seq = 0  # chunks pushed over the session lifetime
+        self.delivered = 0  # samples handed to the caller (pull watermark)
+        self.faults = 0  # dispatch-round faults this session rode through
+        self.serves_since_snap = 0
+        # rotation material: the last quiescent-point snapshot plus every
+        # chunk pushed after it (pruned at each new snapshot, so memory is
+        # bounded by the snapshot cadence)
+        self._wal_snap: dict | None = None
+        self._wal_chunks: list = []
 
     # -- conveniences that delegate to the server ---------------------------
 
@@ -151,8 +185,36 @@ class BankSessionServer:
         single-caller loop behaves like `FilterBankEngine.push`.  Set
         False to drive `step()` yourself and batch many sessions' pushes
         into shared rounds (what the benchmark and a real event loop do).
+    engine : engine instance | None
+        A prebuilt lane engine to serve on instead of the default
+        single-device `FilterBankEngine` — in practice a
+        `repro.filters.ShardedFilterBankEngine` of the SAME program with
+        ``channels == n_slots`` (sessions × shards).  Faults inside its
+        `apply_lanes` recover per the engine's own machinery; the server
+        adds bounded transient retry, per-session fault attribution and
+        post-recovery load shedding.  `swap_program` is a loud error
+        with an injected engine (the server cannot rebuild a mesh it
+        does not own).
+    journal : str | os.PathLike | SessionJournal | None
+        Write-ahead journal directory (see `repro.serving.journal`).
+        The directory must not already hold a journal — recover an
+        existing one with `BankSessionServer.recover`.
+    journal_fsync : bool
+        False keeps SIGKILL durability (unbuffered appends) but skips
+        the power-loss fsyncs.
+    snapshot_every : int
+        Quiescent-point snapshot cadence: a session's tail+counters are
+        re-journaled after this many served rounds (shorter replays,
+        more snapshot bytes).
+    segment_bytes : int
+        Journal segment size that triggers an atomic checkpoint
+        rotation.
+    max_step_retries : int
+        Transient shard errors absorbed per dispatch round before the
+        error propagates to the `step()` caller.
     mode, tile, interpret, chunk_hint
-        Forwarded to the shared `FilterBankEngine`.
+        Forwarded to the shared `FilterBankEngine` (ignored when
+        ``engine`` is injected).
     """
 
     def __init__(
@@ -166,6 +228,12 @@ class BankSessionServer:
         tile: int | None = None,
         interpret: bool | None = None,
         chunk_hint: int = 2048,
+        engine=None,
+        journal=None,
+        journal_fsync: bool = True,
+        snapshot_every: int = 8,
+        segment_bytes: int = 4 << 20,
+        max_step_retries: int = 2,
     ):
         from ..compiler import BlmacProgram, compile_bank
         from ..filters import FilterBankEngine
@@ -182,12 +250,31 @@ class BankSessionServer:
         self._engine_kw = dict(
             mode=mode, tile=tile, interpret=interpret, chunk_hint=chunk_hint
         )
-        self.engine = FilterBankEngine(
-            program, channels=self.n_slots, **self._engine_kw
-        )
+        if engine is not None:
+            eng_prog = getattr(engine, "program", None)
+            if eng_prog is None or eng_prog.key != program.key:
+                raise ValueError(
+                    "injected engine runs a different program than the "
+                    "server (content keys differ) — sessions would select "
+                    "rows of the wrong bank"
+                )
+            if int(engine.channels) != self.n_slots:
+                raise ValueError(
+                    f"injected engine has {engine.channels} channel lanes, "
+                    f"server needs n_slots={self.n_slots}"
+                )
+            self.engine = engine
+            self._engine_injected = True
+        else:
+            self.engine = FilterBankEngine(
+                program, channels=self.n_slots, **self._engine_kw
+            )
+            self._engine_injected = False
         self.sessions: dict = {}  # session_id -> BankSession (incl. parked)
         self._ids = itertools.count()
         self._seq = 0  # monotone activity clock for LRU decisions
+        self.snapshot_every = int(snapshot_every)
+        self.max_step_retries = int(max_step_retries)
         # counters for serve_stats()
         self.steps = 0
         self.rounds = 0
@@ -199,33 +286,87 @@ class BankSessionServer:
         self.evictions = 0
         self.filter_swaps = 0
         self.program_swaps = 0
+        self.step_retries = 0  # transient faults absorbed inside step()
+        self.session_faults = 0  # dispatch-round faults attributed to tenants
         self._lane_fill = 0  # lanes carrying a session, across all rounds
+        self.journal = None
+        if journal is not None:
+            from .journal import SessionJournal
+
+            if not isinstance(journal, SessionJournal):
+                journal = SessionJournal(
+                    os.fspath(journal),
+                    program_key=program.key,
+                    taps=program.taps,
+                    n_filters=program.n_filters,
+                    segment_bytes=segment_bytes,
+                    fsync=journal_fsync,
+                )
+            if journal._seg_index >= 0:
+                raise ValueError(
+                    f"{journal.path} already holds a journal — a fresh "
+                    f"server would supersede it; rebuild the crashed one "
+                    f"with BankSessionServer.recover() instead"
+                )
+            self.journal = journal
+            self._journal_rotate()  # commit the (empty) birth checkpoint
 
     # -- admission / eviction -----------------------------------------------
 
     def _dispatch_us(self) -> float:
-        """Per-round dispatch latency estimate feeding admission control:
-        the shared engine's autotuner verdict when there is one, else the
-        coarse fixed-overhead floor of a forced-mode scheduled dispatch."""
+        """Per-round dispatch latency estimate feeding admission control.
+        Reads the engine's LIVE plan first — on a sharded engine that is
+        `ShardedBankPlan`, rebuilt by every fault recovery, so admission
+        automatically re-prices against a degraded mesh (the 1×1
+        fallback's plan may carry a NaN prediction, which falls through
+        to the coarse fixed-overhead floor)."""
         from ..core.costmodel import PALLAS_CALL_US, STEP_US
 
-        plan = getattr(self.engine, "dispatch_plan", None)
+        plan = getattr(self.engine, "plan", None)  # sharded: live mesh plan
+        if plan is None:
+            plan = getattr(self.engine, "dispatch_plan", None)
         if plan is not None:
-            return float(plan.predicted_us)
+            us = float(plan.predicted_us)
+            if np.isfinite(us):
+                return us
         return PALLAS_CALL_US + STEP_US
+
+    def _degraded(self) -> bool:
+        """True once the (sharded) engine has fallen back to the 1×1
+        plain lowering — the last rung of graceful degradation."""
+        fault = getattr(self.engine, "fault", None)
+        return bool(
+            fault is not None
+            and getattr(fault, "degraded_since", None) is not None
+        )
 
     def _active(self) -> int:
         return sum(
             1 for s in self.sessions.values() if not s.parked and not s.closed
         )
 
+    def _journal_us(self, n_active: int) -> float:
+        """Flat per-step WAL bill for the cost model: one chunk append
+        per active session plus the group-commit fsync."""
+        if self.journal is None:
+            return 0.0
+        from ..core.costmodel import JOURNAL_APPEND_US, JOURNAL_SYNC_US
+
+        return JOURNAL_APPEND_US * n_active + (
+            JOURNAL_SYNC_US if self.journal.fsync else 0.0
+        )
+
     def predicted_step_us(self, extra_sessions: int = 0) -> float:
         """Modelled latency of one batching step with the current active
-        population plus ``extra_sessions`` hypothetical admissions."""
+        population plus ``extra_sessions`` hypothetical admissions,
+        priced against the engine's CURRENT (possibly degraded) plan and
+        the journal's per-step overhead."""
         from ..core.costmodel import predict_session_step_us
 
+        n = self._active() + extra_sessions
         return predict_session_step_us(
-            self._dispatch_us(), self._active() + extra_sessions, self.n_slots
+            self._dispatch_us(), n, self.n_slots,
+            journal_us=self._journal_us(n),
         )
 
     def _park_idle_lru(self) -> bool:
@@ -243,6 +384,22 @@ class BankSessionServer:
         victim.parked = True
         self.evictions += 1
         return True
+
+    def _shed_to_budget(self) -> int:
+        """Post-recovery load shedding: after the engine re-plans onto a
+        smaller (or degraded) mesh, the SAME active population may no
+        longer fit the step budget — park idle LRU sessions until the
+        predicted step fits again (or nothing idle remains).  Returns
+        the number of sessions parked."""
+        shed = 0
+        if self.step_budget_us is None:
+            return shed
+        while (
+            self.predicted_step_us() > self.step_budget_us
+            and self._park_idle_lru()
+        ):
+            shed += 1
+        return shed
 
     def _admit(self, what: str) -> None:
         """Gate one admission (open / resume / un-park) on the cost model,
@@ -279,6 +436,91 @@ class BankSessionServer:
         self._admit(f"re-admit session {session.session_id}")
         session.parked = False
 
+    # -- write-ahead journal plumbing ---------------------------------------
+
+    def _journal_append(self, rec: dict, sync: bool = False) -> None:
+        if self.journal is not None:
+            self.journal.append(rec, sync=sync)
+
+    @staticmethod
+    def _snap_record(session: BankSession, w: dict) -> dict:
+        from .journal import encode_array
+
+        return {
+            "t": "snap",
+            "sid": session.session_id,
+            "seq": int(w["seq"]),
+            "samples_in": int(w["samples_in"]),
+            "samples_out": int(w["samples_out"]),
+            "delivered": int(w["delivered"]),
+            "tail": encode_array(w["tail"]),
+        }
+
+    def _maybe_snapshot(self, session: BankSession, force: bool = False):
+        """Record a quiescent-point snapshot — nothing queued, everything
+        computed delivered — at the configured cadence.  Tracked in
+        memory unconditionally (it is also rotation material) and
+        journaled when a journal is attached."""
+        if (
+            session.queued_samples
+            or session.outbox
+            or session.delivered != session.samples_out
+        ):
+            return  # not quiescent: a snapshot here could lose samples
+        if not force and session.serves_since_snap < self.snapshot_every:
+            return
+        w = session._wal_snap
+        if w is not None and w["seq"] == session.seq \
+                and w["delivered"] == session.delivered:
+            return  # nothing advanced since the last snapshot
+        session._wal_snap = {
+            "seq": session.seq,
+            "samples_in": session.samples_in,
+            "samples_out": session.samples_out,
+            "delivered": session.delivered,
+            "tail": session.tail.copy(),
+        }
+        session._wal_chunks = [
+            (q, c) for q, c in session._wal_chunks if q > session.seq
+        ]
+        session.serves_since_snap = 0
+        if self.journal is not None:
+            self.journal.append(
+                self._snap_record(session, session._wal_snap), sync=True
+            )
+
+    def _journal_checkpoint_records(self) -> list:
+        """Condense the full live state into the record list a rotation
+        (or a post-recovery re-attach) seeds its fresh segment with:
+        per session, the registry entry, the last quiescent snapshot,
+        every chunk pushed since it, and the delivered watermark."""
+        from .journal import encode_array
+
+        recs = []
+        for s in self.sessions.values():
+            recs.append({
+                "t": "open",
+                "sid": s.session_id,
+                "rows": [int(r) for r in s.rows],
+            })
+            w = s._wal_snap
+            if w is not None:
+                recs.append(self._snap_record(s, w))
+            for q, c in s._wal_chunks:
+                recs.append({
+                    "t": "chunk", "sid": s.session_id,
+                    "seq": int(q), "data": encode_array(c),
+                })
+            if s.delivered > (int(w["delivered"]) if w else 0):
+                recs.append({
+                    "t": "pull", "sid": s.session_id,
+                    "delivered": int(s.delivered),
+                })
+        return recs
+
+    def _journal_rotate(self) -> None:
+        self.journal.start_segment(self._journal_checkpoint_records())
+
     # -- session lifecycle ---------------------------------------------------
 
     def open_session(self, rows, session_id: str | None = None) -> BankSession:
@@ -303,11 +545,18 @@ class BankSessionServer:
         self._seq += 1
         s.last_active = self._seq
         self.sessions[session_id] = s
+        self._journal_append(
+            {"t": "open", "sid": session_id, "rows": [int(r) for r in s.rows]},
+            sync=True,
+        )
         return s
 
     def close_session(self, session: BankSession) -> None:
         session.closed = True
-        self.sessions.pop(session.session_id, None)
+        if self.sessions.pop(session.session_id, None) is not None:
+            self._journal_append(
+                {"t": "close", "sid": session.session_id}, sync=True
+            )
 
     def pause_session(self, session: BankSession):
         """Flush the session, freeze its stream as a `TailSnapshot`
@@ -358,6 +607,10 @@ class BankSessionServer:
         s.tail = np.asarray(snapshot.tail, np.int32).copy()
         s.samples_in = int(snapshot.samples_in)
         s.samples_out = int(snapshot.samples_out)
+        # a resumed stream starts quiescent: everything computed before
+        # the pause was delivered (or rode away in the pause snapshot)
+        s.delivered = s.samples_out
+        self._maybe_snapshot(s, force=True)
         return s
 
     # -- hot swap ------------------------------------------------------------
@@ -384,6 +637,17 @@ class BankSessionServer:
         session.rows = rows
         session.subkey = self.program.select(rows).key  # warm via cache
         self.filter_swaps += 1
+        self._journal_append(
+            {
+                "t": "select",
+                "sid": session.session_id,
+                "rows": [int(r) for r in rows],
+            },
+            sync=True,
+        )
+        # the flush above delivered everything: snapshot the swap point so
+        # a crash never replays pre-swap chunks under the new selection
+        self._maybe_snapshot(session, force=True)
         return out
 
     def swap_program(self, coeffs, spec=None) -> None:
@@ -398,6 +662,13 @@ class BankSessionServer:
         from ..compiler import BlmacProgram, compile_bank
         from ..filters import FilterBankEngine
 
+        if self._engine_injected:
+            raise ValueError(
+                "swap_program is not supported on an injected engine — "
+                "the server cannot rebuild a sharded mesh it does not "
+                "own; build the new engine yourself and start a new "
+                "server (or construct the server without engine=)"
+            )
         if isinstance(coeffs, BlmacProgram):
             new_prog = coeffs
         else:
@@ -424,6 +695,14 @@ class BankSessionServer:
         for s in self.sessions.values():
             s.subkey = new_prog.select(s.rows).key
         self.program_swaps += 1
+        if self.journal is not None:
+            # the journal is content-addressed to ONE program: re-key it
+            # and rotate so the fresh segment's checkpoint belongs to the
+            # new digest.  Caveat (documented): outputs computed under
+            # the OLD program but not yet pulled at a crash regenerate
+            # under the NEW program after recovery.
+            self.journal.program_key = new_prog.key
+            self._journal_rotate()
 
     # -- streaming -----------------------------------------------------------
 
@@ -450,6 +729,19 @@ class BankSessionServer:
         self._seq += 1
         session.last_active = self._seq
         if chunk.shape[0]:
+            # write-ahead: the chunk is journaled (and SIGKILL-durable)
+            # before any queue or counter can observe it
+            session.seq += 1
+            session._wal_chunks.append((session.seq, chunk))
+            if self.journal is not None:
+                from .journal import encode_array
+
+                self.journal.append({
+                    "t": "chunk",
+                    "sid": session.session_id,
+                    "seq": session.seq,
+                    "data": encode_array(chunk),
+                })
             session.queue.append((chunk, time.monotonic()))
             session.queued_samples += int(chunk.shape[0])
             session.samples_in += int(chunk.shape[0])
@@ -460,11 +752,23 @@ class BankSessionServer:
 
     def pull(self, session: BankSession) -> np.ndarray:
         """Drain a session's computed outputs as one gapless
-        (len(rows), n) int32 array (n may be 0)."""
+        (len(rows), n) int32 array (n may be 0).  The delivered-sample
+        watermark is journaled BEFORE the data is returned, so recovery
+        never re-delivers samples the caller already has."""
         if not session.outbox:
+            self._maybe_snapshot(session)
             return np.zeros((session.rows.size, 0), np.int32)
         out, session.outbox = session.outbox, []
-        return np.concatenate(out, axis=1) if len(out) > 1 else out[0]
+        out = np.concatenate(out, axis=1) if len(out) > 1 else out[0]
+        if out.shape[1]:
+            session.delivered += int(out.shape[1])
+            self._journal_append({
+                "t": "pull",
+                "sid": session.session_id,
+                "delivered": session.delivered,
+            })
+        self._maybe_snapshot(session)
+        return out
 
     def _ready_sessions(self) -> list:
         """Consume priming-only queues into tails (no kernel work) and
@@ -489,50 +793,100 @@ class BankSessionServer:
         ready.sort(key=lambda s: s.queue[0][1])
         return ready
 
+    def _dispatch_lanes(self, buf, batch) -> np.ndarray:
+        """One dispatch round through the shared engine, with the fault
+        contract the sharded engine needs: transient shard errors get a
+        bounded retry (the call is stateless, so a retry is a clean
+        re-dispatch), any detection the engine's recovery machinery
+        handled DURING the call is attributed to exactly the sessions in
+        this round, and a recovery re-plan immediately re-prices the
+        budget (shedding idle load if the degraded mesh no longer fits).
+        Per-tenant isolation is structural: sessions outside ``batch``
+        have no samples in ``buf``, so neither the fault nor the replay
+        can touch their streams."""
+        fault = getattr(self.engine, "fault", None)
+        d0 = fault.detections if fault is not None else 0
+        attempts = 0
+        try:
+            while True:
+                try:
+                    return self.engine.apply_lanes(buf)
+                except Exception as e:
+                    from ..distributed.faultbank import TransientShardError
+
+                    if not isinstance(e, TransientShardError):
+                        raise
+                    attempts += 1
+                    self.step_retries += 1
+                    if attempts > self.max_step_retries:
+                        raise
+        finally:
+            d1 = fault.detections if fault is not None else 0
+            if d1 > d0:
+                self.session_faults += d1 - d0
+                for s in batch:
+                    s.faults += 1
+                self._shed_to_budget()
+
     def step(self) -> int:
         """Run one batching step: serve EVERY ready session, packing up
         to ``n_slots`` of them per dispatch round.  Returns the number of
-        sessions served.  Idempotent when nothing is queued."""
+        sessions served.  Idempotent when nothing is queued.
+
+        Fault isolation: a round that raises (transient retries
+        exhausted, or a terminal shard loss) leaves ITS sessions' queues
+        intact — nothing is consumed until the round's outputs exist —
+        while rounds already completed in this step keep their outputs.
+        With a journal attached the step ends with one group-commit
+        fsync covering every chunk/pull record appended since the last."""
         ready = self._ready_sessions()
         if not ready:
             return 0
         self.steps += 1
         taps = self.program.taps
         served = 0
-        for r0 in range(0, len(ready), self.n_slots):
-            batch = ready[r0:r0 + self.n_slots]
-            lane_bufs = []
-            for s in batch:
-                data = np.concatenate([c for c, _ in s.queue])
-                lane_bufs.append(
-                    np.concatenate([s.tail[0], data])
-                )
-            lane_len = max(b.shape[0] for b in lane_bufs)
-            buf = np.zeros((self.n_slots, lane_len), np.int32)
-            for lane, b in enumerate(lane_bufs):
-                buf[lane, : b.shape[0]] = b
-            y = self.engine.apply_lanes(buf)  # (B_full, n_slots, lane_len-taps+1)
-            self.rounds += 1
-            self._lane_fill += len(batch)
-            now = time.monotonic()
-            for lane, s in enumerate(batch):
-                valid = lane_bufs[lane].shape[0]
-                n_out = valid - taps + 1
-                s.outbox.append(
-                    np.ascontiguousarray(y[s.rows, lane, :n_out])
-                )
-                s.tail = lane_bufs[lane][None, valid - (taps - 1):] \
-                    if taps > 1 else np.zeros((1, 0), np.int32)
-                s.samples_out += n_out
-                self.samples_out += n_out
-                for _, ts in s.queue:
-                    s.latencies.append(now - ts)
-                self.chunks_out += len(s.queue)
-                s.queue = []
-                s.queued_samples = 0
-                self._seq += 1
-                s.last_active = self._seq
-                served += 1
+        try:
+            for r0 in range(0, len(ready), self.n_slots):
+                batch = ready[r0:r0 + self.n_slots]
+                lane_bufs = []
+                for s in batch:
+                    data = np.concatenate([c for c, _ in s.queue])
+                    lane_bufs.append(
+                        np.concatenate([s.tail[0], data])
+                    )
+                lane_len = max(b.shape[0] for b in lane_bufs)
+                buf = np.zeros((self.n_slots, lane_len), np.int32)
+                for lane, b in enumerate(lane_bufs):
+                    buf[lane, : b.shape[0]] = b
+                y = self._dispatch_lanes(buf, batch)
+                # y: (B_full, n_slots, lane_len - taps + 1)
+                self.rounds += 1
+                self._lane_fill += len(batch)
+                now = time.monotonic()
+                for lane, s in enumerate(batch):
+                    valid = lane_bufs[lane].shape[0]
+                    n_out = valid - taps + 1
+                    s.outbox.append(
+                        np.ascontiguousarray(y[s.rows, lane, :n_out])
+                    )
+                    s.tail = lane_bufs[lane][None, valid - (taps - 1):] \
+                        if taps > 1 else np.zeros((1, 0), np.int32)
+                    s.samples_out += n_out
+                    self.samples_out += n_out
+                    for _, ts in s.queue:
+                        s.latencies.append(now - ts)
+                    self.chunks_out += len(s.queue)
+                    s.queue = []
+                    s.queued_samples = 0
+                    s.serves_since_snap += 1
+                    self._seq += 1
+                    s.last_active = self._seq
+                    served += 1
+        finally:
+            if self.journal is not None:
+                self.journal.sync()  # group commit
+                if self.journal.needs_rotation:
+                    self._journal_rotate()
         return served
 
     def flush(self) -> int:
@@ -547,6 +901,10 @@ class BankSessionServer:
         `fault_stats()`."""
 
         def _pct(samples, q):
+            # None, not an IndexError, for a fresh server / all-parked
+            # population with no latency samples yet
+            if samples is None or len(samples) == 0:
+                return None
             return float(np.percentile(np.asarray(samples), q)) * 1e3
 
         all_lat = []
@@ -561,8 +919,10 @@ class BankSessionServer:
                 "queued_samples": int(s.queued_samples),
                 "samples_in": int(s.samples_in),
                 "samples_out": int(s.samples_out),
-                "latency_p50_ms": _pct(lat, 50) if lat else None,
-                "latency_p99_ms": _pct(lat, 99) if lat else None,
+                "delivered": int(s.delivered),
+                "faults": int(s.faults),
+                "latency_p50_ms": _pct(lat, 50),
+                "latency_p99_ms": _pct(lat, 99),
             }
         return {
             "sessions": len(self.sessions),
@@ -586,9 +946,188 @@ class BankSessionServer:
             "evictions": self.evictions,
             "filter_swaps": self.filter_swaps,
             "program_swaps": self.program_swaps,
+            "step_retries": self.step_retries,
+            "session_faults": self.session_faults,
+            "degraded": self._degraded(),
             "predicted_step_us": self.predicted_step_us(),
             "step_budget_us": self.step_budget_us,
-            "latency_p50_ms": _pct(all_lat, 50) if all_lat else None,
-            "latency_p99_ms": _pct(all_lat, 99) if all_lat else None,
+            "latency_p50_ms": _pct(all_lat, 50),
+            "latency_p99_ms": _pct(all_lat, 99),
+            "journal": (
+                self.journal.stats() if self.journal is not None else None
+            ),
             "per_session": per_session,
         }
+
+    def fault_stats(self) -> dict:
+        """Fault observability through the serving layer: the engine's
+        own counters (mesh shape, detections, recoveries, injected
+        faults…) when it has any, plus the server's per-tenant
+        attribution — which sessions rode through a faulted dispatch
+        round, and how often."""
+        eng_stats = getattr(self.engine, "fault_stats", None)
+        d = dict(eng_stats()) if callable(eng_stats) else {}
+        d["step_retries"] = self.step_retries
+        d["session_faults"] = self.session_faults
+        d["per_session"] = {
+            sid: int(s.faults) for sid, s in self.sessions.items()
+        }
+        return d
+
+    # -- crash recovery ------------------------------------------------------
+
+    def close(self) -> None:
+        """Flush and close the journal (if any) — the clean-shutdown
+        twin of `recover`; the server object stays usable journal-less."""
+        if self.journal is not None:
+            self.journal.close()
+            self.journal = None
+
+    @classmethod
+    def recover(
+        cls,
+        path,
+        program,
+        *,
+        engine=None,
+        journal_fsync: bool = True,
+        segment_bytes: int = 4 << 20,
+        **kwargs,
+    ):
+        """Rebuild a crashed server from its write-ahead journal.
+
+        ``path`` is the journal directory of the dead process;
+        ``program`` is the same bank (coefficients or a compiled
+        `BlmacProgram`) — validated against the journal's program
+        digest, so recovering under the wrong bank is a loud
+        `JournalFormatError`, never a silently wrong stream.
+
+        The rebuild is bit-exact and exactly-once: a torn tail record
+        (the process died mid-append) is truncated at the last valid
+        record; each session is restored from its last quiescent
+        snapshot; journaled chunks after the snapshot are re-pushed and
+        re-served through the engine; and the regenerated output below
+        the session's journaled delivered-watermark is trimmed, so the
+        first post-recovery `pull` continues the stream with no
+        duplicates and no gaps.  Admission control is suspended during
+        the rebuild (the journal already admitted these sessions once)
+        and the server re-attaches to ``path`` with one atomic
+        checkpoint rotation.  Extra ``kwargs`` (``n_slots``,
+        ``step_budget_us``, ``engine`` …) configure the new server as
+        usual."""
+        from ..compiler import BlmacProgram, compile_bank
+        from .journal import (JournalFormatError, SessionJournal,
+                              decode_array)
+
+        if not isinstance(program, BlmacProgram):
+            program = compile_bank(np.atleast_2d(np.asarray(program)))
+        header, records = SessionJournal.replay(path)
+        if header.get("program_key") != program.key:
+            raise JournalFormatError(
+                f"{os.fspath(path)}: journal belongs to program "
+                f"{str(header.get('program_key', '?'))[:12]}…, recovery "
+                f"was offered {program.key[:12]}…"
+            )
+        server = cls(program, engine=engine, journal=None, **kwargs)
+        # fold the log into per-session material: registry, last
+        # snapshot, undigested chunks, delivered watermark
+        reg: dict = {}
+        for rec in records:
+            t = rec.get("t")
+            sid = rec.get("sid")
+            if t == "open":
+                reg[sid] = {
+                    "rows": rec["rows"], "snap": None,
+                    "chunks": [], "delivered": 0,
+                }
+            elif t == "close":
+                reg.pop(sid, None)
+            elif sid not in reg:
+                continue  # record for a session closed later in the log
+            elif t == "select":
+                reg[sid]["rows"] = rec["rows"]
+            elif t == "chunk":
+                reg[sid]["chunks"].append(
+                    (int(rec["seq"]), decode_array(rec["data"]))
+                )
+            elif t == "snap":
+                r = reg[sid]
+                r["snap"] = rec
+                r["chunks"] = [
+                    (q, c) for q, c in r["chunks"] if q > int(rec["seq"])
+                ]
+                r["delivered"] = max(r["delivered"], int(rec["delivered"]))
+            elif t == "pull":
+                reg[sid]["delivered"] = max(
+                    reg[sid]["delivered"], int(rec["delivered"])
+                )
+        saved = (server.step_budget_us, server.max_sessions, server.auto_step)
+        server.step_budget_us = None
+        server.max_sessions = None
+        server.auto_step = False
+        try:
+            for sid, r in reg.items():
+                s = server.open_session(
+                    np.asarray(r["rows"], np.int64), session_id=sid
+                )
+                snap = r["snap"]
+                if snap is not None:
+                    s.tail = np.atleast_2d(
+                        decode_array(snap["tail"]).astype(np.int32)
+                    )
+                    s.samples_in = int(snap["samples_in"])
+                    s.samples_out = int(snap["samples_out"])
+                    s.seq = int(snap["seq"])
+                    s._wal_snap = {
+                        "seq": s.seq,
+                        "samples_in": s.samples_in,
+                        "samples_out": s.samples_out,
+                        "delivered": int(snap["delivered"]),
+                        "tail": s.tail.copy(),
+                    }
+                s.delivered = max(
+                    int(r["delivered"]),
+                    int(snap["delivered"]) if snap is not None else 0,
+                )
+                for _, chunk in sorted(r["chunks"], key=lambda t_: t_[0]):
+                    server.push(s, chunk)
+            server.step()  # regenerate every session's post-snapshot output
+            for sid, r in reg.items():
+                s = server.sessions[sid]
+                base = (
+                    int(r["snap"]["samples_out"])
+                    if r["snap"] is not None else 0
+                )
+                drop = s.delivered - base
+                if drop <= 0:
+                    continue
+                out = (
+                    np.concatenate(s.outbox, axis=1)
+                    if len(s.outbox) > 1
+                    else (s.outbox[0] if s.outbox
+                          else np.zeros((s.rows.size, 0), np.int32))
+                )
+                if drop > out.shape[1]:
+                    raise JournalFormatError(
+                        f"{os.fspath(path)}: session {sid} journaled a "
+                        f"delivered watermark {s.delivered} beyond its "
+                        f"replayable output {base + out.shape[1]} — "
+                        f"chunk records are missing"
+                    )
+                trimmed = np.ascontiguousarray(out[:, drop:])
+                s.outbox = [trimmed] if trimmed.shape[1] else []
+        finally:
+            (server.step_budget_us, server.max_sessions,
+             server.auto_step) = saved
+        # re-attach at the same path: one atomic checkpoint rotation
+        # supersedes (and deletes) the crashed process's segments
+        server.journal = SessionJournal(
+            path,
+            program_key=program.key,
+            taps=program.taps,
+            n_filters=program.n_filters,
+            segment_bytes=segment_bytes,
+            fsync=journal_fsync,
+        )
+        server._journal_rotate()
+        return server

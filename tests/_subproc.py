@@ -28,17 +28,27 @@ def device_flags(devices: int, base: str = "") -> str:
     return " ".join(flags)
 
 
-def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
+def run_py_raw(
+    code: str, devices: int = 8, timeout: int = 600
+) -> subprocess.CompletedProcess:
+    """Like `run_py` but returns the CompletedProcess without asserting
+    on the exit status.  Crash-recovery tests use this for the victim
+    process, which is EXPECTED to die (``os.kill(os.getpid(),
+    signal.SIGKILL)`` exits with -9, not 0)."""
     env = dict(os.environ)
     env["XLA_FLAGS"] = device_flags(devices, env.get("XLA_FLAGS", ""))
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    res = subprocess.run(
+    return subprocess.run(
         [sys.executable, "-c", code],
         env=env,
         capture_output=True,
         text=True,
         timeout=timeout,
     )
+
+
+def run_py(code: str, devices: int = 8, timeout: int = 600) -> str:
+    res = run_py_raw(code, devices=devices, timeout=timeout)
     if res.returncode != 0:
         raise AssertionError(
             f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"

@@ -376,6 +376,92 @@ def chaos_check(
     return stats
 
 
+def session_chaos_check(
+    qbank: np.ndarray,
+    kills,
+    *,
+    n_sessions: int = 8,
+    n_slots: int = 4,
+    rows_per_session: int = 2,
+    n_chunks: int = 6,
+    chunk: int = 256,
+    n_bank_shards: int | None = None,
+    mesh=None,
+    seed: int = 0,
+    journal_path=None,
+) -> dict:
+    """Sessions × shards chaos leg: N tenant streams batched into the
+    shared lanes of a `BankSessionServer` whose dispatches run through a
+    `ShardedFilterBankEngine`, with shards killed mid-`step()`.
+
+    Every session's concatenated stream must equal the Eq. 2 oracle for
+    its own (stream, row-selection) to the last bit — shard loss is an
+    arithmetic no-op — and the server must attribute each detected fault
+    to exactly the ``n_slots`` sessions of the failed dispatch round
+    (per-tenant isolation: everyone else's counter stays put).  With
+    ``journal_path`` the run is also journaled, checking the WAL rides
+    along with mesh recovery.  Returns the server's ``fault_stats()``.
+    """
+    from repro.distributed.faultbank import FaultInjector
+    from repro.filters import ShardedFilterBankEngine
+    from repro.serving import BankSessionServer
+
+    program = compile_bank(np.atleast_2d(np.asarray(qbank, np.int64)))
+    rng = np.random.default_rng(seed)
+    lim = 1 << (program.spec.sample_bits - 1)
+    n = program.n_filters
+    sels = [
+        np.sort(rng.choice(n, size=min(rows_per_session, n), replace=False))
+        for _ in range(n_sessions)
+    ]
+    streams = [
+        rng.integers(-lim, lim, n_chunks * chunk).astype(np.int32)
+        for _ in range(n_sessions)
+    ]
+    oracle = lower(program, "oracle")
+
+    injector = FaultInjector()
+    kills = list(kills)
+    for shard, at_chunk in kills:
+        injector.kill_shard(shard, at_chunk)
+    eng = ShardedFilterBankEngine(
+        program, channels=n_slots, mesh=mesh, n_bank_shards=n_bank_shards,
+        fault_injector=injector,
+    )
+    server = BankSessionServer(
+        program, n_slots=n_slots, auto_step=False, engine=eng,
+        step_budget_us=1e12, journal=journal_path,
+    )
+    sessions = [server.open_session(sel) for sel in sels]
+    outs = [[] for _ in range(n_sessions)]
+    for k in range(n_chunks):
+        for i, s in enumerate(sessions):
+            s.push(streams[i][k * chunk: (k + 1) * chunk])
+        server.step()
+        for i, s in enumerate(sessions):
+            out = s.pull()
+            if out.shape[1]:
+                outs[i].append(out)
+    for i in range(n_sessions):
+        want = oracle(streams[i])[sels[i], 0, :]
+        got = np.concatenate(outs[i], axis=1)
+        assert np.array_equal(np.asarray(got, np.int64), want), (
+            f"session chaos: tenant {i} diverged from its oracle after "
+            f"kills {kills} (final mesh {eng.n_bank_shards}x{eng.n_data})"
+        )
+    stats = server.fault_stats()
+    assert stats["injected"]["kills"] == len(kills), stats
+    assert stats["lost_shards"] == len(kills), stats
+    assert stats["recoveries"] == len(kills), stats
+    # per-tenant isolation: each kill marked one round's tenants, and
+    # only them — total attributed faults = kills × round size
+    marked = sum(stats["per_session"].values())
+    assert marked <= len(kills) * n_slots, stats
+    assert stats["session_faults"] == len(kills), stats
+    server.close()
+    return stats
+
+
 # The harness grew its fifth (sharded) leg in PR 4; the historical name
 # stays importable for existing tests and external callers.
 four_way_check = five_way_check

@@ -1,0 +1,317 @@
+"""Write-ahead session journal: `repro.serving.journal` + crash recovery.
+
+Durability contract under test: the journal is CRC-framed and
+unbuffered, so after ANY prefix of the process's writes reaches disk —
+torn tail records included — `BankSessionServer.recover(path)` rebuilds
+every session bit-exactly and `pull` resumes with no duplicated and no
+missing samples.
+"""
+import json
+import os
+import signal
+import struct
+
+import numpy as np
+import pytest
+
+from repro.compiler import SnapshotFormatError, TailSnapshot, compile_bank
+from repro.filters import (FilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+from repro.serving import BankSessionServer, JournalFormatError, SessionJournal
+from repro.serving.journal import decode_array, encode_array, _read_records
+from tests._subproc import run_py_raw
+
+TAPS = 31
+
+
+def _program(n_filters: int = 16, taps: int = TAPS):
+    return compile_bank(spread_lowpass_qbank(n_filters, taps))
+
+
+def _journal(path, prog, **kw):
+    return SessionJournal(path, program_key=prog.key, taps=prog.taps,
+                          n_filters=prog.n_filters, **kw)
+
+
+def _seg(path):
+    names = sorted(n for n in os.listdir(path) if n.startswith("wal."))
+    return os.path.join(str(path), names[-1])
+
+
+# ---------------------------------------------------------------------------
+# record framing: CRC rejection, torn tails, format gating
+# ---------------------------------------------------------------------------
+
+
+def test_array_payload_round_trip():
+    a = np.arange(-6, 6, dtype=np.int32).reshape(3, 4)
+    b = decode_array(encode_array(a))
+    assert b.dtype == a.dtype and np.array_equal(a, b)
+    assert b.flags.writeable  # decode must not hand out frozen buffers
+
+
+def test_append_replay_round_trip(tmp_path):
+    prog = _program()
+    j = _journal(tmp_path / "wal", prog)
+    j.start_segment()
+    j.append({"t": "open", "sid": "a", "rows": [1, 2]})
+    j.append({"t": "chunk", "sid": "a", "seq": 1,
+              "x": encode_array(np.arange(5, dtype=np.int32))}, sync=True)
+    j.close()
+    header, records = SessionJournal.replay(tmp_path / "wal")
+    assert header["program_key"] == prog.key
+    assert [r["t"] for r in records] == ["open", "chunk"]
+    assert np.array_equal(decode_array(records[1]["x"]), np.arange(5))
+
+
+def test_corrupt_record_crc_truncates_everything_after(tmp_path):
+    prog = _program()
+    j = _journal(tmp_path / "wal", prog)
+    j.start_segment()
+    for i in range(4):
+        j.append({"t": "open", "sid": f"s{i}", "rows": [i]})
+    j.close()
+    seg = _seg(tmp_path / "wal")
+    records, _ = _read_records(seg)
+    assert len(records) == 5  # header + 4
+    # flip one payload byte inside the THIRD record: it and everything
+    # after it are untrustworthy (framing is sequential)
+    data = bytearray(open(seg, "rb").read())
+    off = 0
+    for _ in range(2):  # skip header + first open
+        ln, _crc = struct.unpack_from("<II", data, off)
+        off += 8 + ln
+    data[off + 8 + 3] ^= 0xFF
+    open(seg, "wb").write(bytes(data))
+    header, records = SessionJournal.replay(tmp_path / "wal", repair=False)
+    assert [r["sid"] for r in records] == ["s0"]
+
+
+def test_torn_tail_truncated_and_physically_repaired(tmp_path):
+    prog = _program()
+    j = _journal(tmp_path / "wal", prog)
+    j.start_segment()
+    j.append({"t": "open", "sid": "a", "rows": [0]})
+    j.close()
+    seg = _seg(tmp_path / "wal")
+    whole = os.path.getsize(seg)
+    with open(seg, "ab") as f:  # a record the crash cut mid-write
+        f.write(struct.pack("<II", 1000, 123) + b"only a few bytes")
+    header, records = SessionJournal.replay(tmp_path / "wal")
+    assert [r["t"] for r in records] == ["open"]
+    # repair=True (default) physically truncates the torn bytes away
+    assert os.path.getsize(seg) == whole
+    # ...so a recovered server can append right where the log ends
+    j2 = _journal(tmp_path / "wal", prog)
+    assert j2._seg_index == 0
+
+
+def test_replay_rejects_unusable_directories(tmp_path):
+    with pytest.raises(JournalFormatError, match="not a journal"):
+        SessionJournal.replay(tmp_path / "nope")
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(JournalFormatError, match="no journal segments"):
+        SessionJournal.replay(empty)
+    bad = tmp_path / "bad"
+    bad.mkdir()
+    (bad / "wal.000000.log").write_bytes(b"\xff" * 32)
+    with pytest.raises(JournalFormatError, match="no readable header"):
+        SessionJournal.replay(bad)
+
+
+def test_replay_rejects_wrong_kind_and_version(tmp_path):
+    prog = _program()
+    for patch, match in [({"kind": "other"}, "not a session journal"),
+                         ({"format_version": 99}, "version")]:
+        root = tmp_path / patch["kind"] if "kind" in patch else tmp_path / "v"
+        j = _journal(root, prog)
+        hdr = j._header(0)
+        hdr.update(patch)
+        j._header = lambda index, _h=hdr: _h
+        j.start_segment()
+        j.close()
+        with pytest.raises(JournalFormatError, match=match):
+            SessionJournal.replay(root)
+
+
+def test_rotation_checkpoints_and_deletes_old_segments(tmp_path):
+    prog = _program(8)
+    srv = BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                            journal=tmp_path / "wal", snapshot_every=1,
+                            segment_bytes=2000)
+    s = srv.open_session([0, 1])
+    rng = np.random.default_rng(0)
+    x = rng.integers(-128, 128, 6 * 64).astype(np.int32)
+    for k in range(6):
+        s.push(x[k * 64:(k + 1) * 64])
+        srv.step()
+        s.pull()
+    assert srv.journal.rotations >= 1
+    names = [n for n in os.listdir(tmp_path / "wal") if n.startswith("wal.")]
+    assert len(names) == 1  # superseded segments are deleted
+    srv.close()
+    # the surviving segment alone rebuilds the full session
+    srv2 = BankSessionServer.recover(tmp_path / "wal", prog)
+    s2 = srv2.sessions[s.session_id]
+    assert s2.samples_in == 6 * 64 and s2.delivered == s2.samples_out
+    srv2.close()
+
+
+# ---------------------------------------------------------------------------
+# server-level crash recovery
+# ---------------------------------------------------------------------------
+
+
+def test_recover_is_bit_exact_with_queued_chunks(tmp_path):
+    prog = _program()
+    rng = np.random.default_rng(3)
+    srv = BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                            journal=tmp_path / "wal", snapshot_every=2)
+    sels = [[0, 3], [5, 1], [7]]
+    sessions = [srv.open_session(r) for r in sels]
+    streams = [[] for _ in sels]
+    outs = [[] for _ in sels]
+    for k in range(5):
+        for i, s in enumerate(sessions):
+            chunk = rng.integers(-128, 128, int(rng.integers(8, 80))
+                                 ).astype(np.int32)
+            streams[i].append(chunk)
+            s.push(chunk)
+        if k < 4:
+            srv.step()
+            for i, s in enumerate(sessions):
+                out = s.pull()
+                if out.shape[1]:
+                    outs[i].append(out)
+    # die here: chunk 5 queued but never stepped, no close(), no sync —
+    # abandoning the object IS the SIGKILL model because appends are
+    # unbuffered writes
+    del srv
+
+    srv2 = BankSessionServer.recover(tmp_path / "wal", prog)
+    sessions2 = [srv2.sessions[s.session_id] for s in sessions]
+    for i, s in enumerate(sessions2):
+        out = s.pull()
+        if out.shape[1]:
+            outs[i].append(out)
+        chunk = rng.integers(-128, 128, 64).astype(np.int32)
+        streams[i].append(chunk)
+        s.push(chunk)
+    srv2.step()
+    for i, s in enumerate(sessions2):
+        out = s.pull()
+        if out.shape[1]:
+            outs[i].append(out)
+        x = np.concatenate(streams[i])
+        ref = fir_bit_layers_batch(x[None, :], prog.qbank)[np.asarray(sels[i]), 0]
+        got = np.concatenate(outs[i], axis=1)
+        assert np.array_equal(got, ref[:, :got.shape[1]]), f"session {i}"
+        assert got.shape[1] == x.size - TAPS + 1  # nothing lost
+    srv2.close()
+
+
+def test_recover_rejects_program_digest_mismatch(tmp_path):
+    prog = _program()
+    srv = BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                            journal=tmp_path / "wal")
+    srv.open_session([0])
+    srv.close()
+    other = _program(taps=TAPS + 2)
+    with pytest.raises(JournalFormatError, match="belongs to program"):
+        BankSessionServer.recover(tmp_path / "wal", other)
+
+
+def test_attach_to_populated_journal_dir_is_refused(tmp_path):
+    prog = _program()
+    srv = BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                            journal=tmp_path / "wal")
+    srv.close()
+    with pytest.raises(ValueError, match="recover"):
+        BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                          journal=tmp_path / "wal")
+
+
+def test_sigkill_crash_then_recover_subprocess(tmp_path):
+    """The real thing: a serving PROCESS is SIGKILLed mid-flight and a
+    fresh process recovers every stream bit-exactly."""
+    wal = tmp_path / "wal"
+    victim = run_py_raw(f"""
+import os, signal
+import numpy as np
+from repro.compiler import compile_bank
+from repro.filters import spread_lowpass_qbank
+from repro.serving import BankSessionServer
+
+prog = compile_bank(spread_lowpass_qbank(16, {TAPS}))
+srv = BankSessionServer(prog, n_slots=2, interpret=True, auto_step=False,
+                        journal={str(wal)!r}, snapshot_every=2)
+rng = np.random.default_rng(11)
+ss = [srv.open_session([i, i + 8], session_id=f"t{{i}}") for i in range(3)]
+for k in range(3):
+    for s in ss:
+        s.push(rng.integers(-128, 128, 96).astype(np.int32))
+    srv.step()
+    for s in ss:
+        s.pull()
+for s in ss:  # queued, never stepped
+    s.push(rng.integers(-128, 128, 96).astype(np.int32))
+os.kill(os.getpid(), signal.SIGKILL)
+""", devices=1)
+    assert victim.returncode == -signal.SIGKILL, victim.stderr
+    prog = _program()
+    srv = BankSessionServer.recover(wal, prog)
+    assert sorted(srv.sessions) == ["t0", "t1", "t2"]
+    # replay the victim's RNG: 4 chunks of 96 per session, round-robin
+    rng = np.random.default_rng(11)
+    streams = [[] for _ in range(3)]
+    for _ in range(4):
+        for i in range(3):
+            streams[i].append(rng.integers(-128, 128, 96).astype(np.int32))
+    for i in range(3):
+        s = srv.sessions[f"t{i}"]
+        got = s.pull()
+        x = np.concatenate(streams[i])
+        ref = fir_bit_layers_batch(x[None, :], prog.qbank)[[i, i + 8], 0]
+        n_pre = 3 * 96 - (TAPS - 1)  # delivered before the crash
+        assert np.array_equal(got, ref[:, n_pre:n_pre + got.shape[1]])
+        assert s.samples_in == 4 * 96
+    srv.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: tolerant snapshot load + empty-stats guard
+# ---------------------------------------------------------------------------
+
+
+def test_tail_snapshot_tolerates_pre_session_field_files(tmp_path):
+    """Snapshots written before the session field existed (header without
+    a ``session`` key) must still load, with ``session == ""``."""
+    prog = _program()
+    eng = FilterBankEngine(prog, channels=1, interpret=True)
+    eng.push(np.arange(TAPS + 5, dtype=np.int32)[None, :])
+    snap = eng.snapshot_tail()
+    path = tmp_path / "old.npz"
+    snap.save(path)
+    with np.load(path) as z:
+        header = json.loads(str(z["header"]))
+        tail = z["tail"]
+    del header["session"]
+    np.savez(path, header=json.dumps(header), tail=tail)
+    loaded = TailSnapshot.load(path)
+    assert loaded.session == ""
+    assert np.array_equal(loaded.tail, snap.tail)
+    # ...while a wrong-kind file still fails loudly
+    np.savez(path, header=json.dumps({"kind": "x"}), tail=tail)
+    with pytest.raises(SnapshotFormatError, match="not a tail-snapshot"):
+        TailSnapshot.load(path)
+
+
+def test_serve_stats_empty_percentiles_are_none():
+    srv = BankSessionServer(_program(), n_slots=2, interpret=True,
+                            auto_step=False)
+    srv.open_session([0])  # registered but never served
+    stats = srv.serve_stats()
+    assert stats["latency_p50_ms"] is None
+    assert stats["latency_p99_ms"] is None
+    assert json.dumps(stats)  # stays JSON-clean

@@ -1,0 +1,385 @@
+"""Sessions × shards: `BankSessionServer` on a `ShardedFilterBankEngine`.
+
+The composition under test: multi-tenant shared-lane batching (PR 7)
+running ON TOP of the fault-tolerant sharded mesh (PR 6).  Lane
+dispatches route through the sharded engine's stateless `apply_lanes`,
+so a shard kill / transient / corruption mid-`step()` triggers the
+engine's recovery machinery while the session layer provides per-tenant
+fault isolation: only the sessions in the failed dispatch round replay,
+and `fault_stats()` attributes the fault to exactly those tenants.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from repro.compiler import compile_bank
+from repro.distributed.faultbank import FaultInjector, TransientShardError
+from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+from repro.serving import BankSessionServer
+from tests._subproc import run_py, run_py_raw
+
+TAPS = 31
+
+
+def _program(n_filters: int = 8, taps: int = TAPS):
+    return compile_bank(spread_lowpass_qbank(n_filters, taps))
+
+
+def _sharded_server(prog, inj=None, n_slots=2, **engine_kw):
+    eng = ShardedFilterBankEngine(
+        prog, channels=n_slots, fault_injector=inj, **engine_kw
+    )
+    return BankSessionServer(prog, n_slots=n_slots, auto_step=False,
+                             engine=eng), eng
+
+
+def _stream_one(srv, session, rows, x, chunk=100):
+    outs = []
+    for k in range(0, x.size, chunk):
+        session.push(x[k:k + chunk])
+        srv.step()
+        out = session.pull()
+        if out.shape[1]:
+            outs.append(out)
+    return np.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# engine injection contract
+# ---------------------------------------------------------------------------
+
+
+def test_engine_injection_validates_program_and_geometry():
+    prog = _program()
+    other = _program(taps=TAPS + 2)
+    with pytest.raises(ValueError, match="program"):
+        BankSessionServer(
+            prog, n_slots=2, auto_step=False,
+            engine=ShardedFilterBankEngine(other, channels=2),
+        )
+    with pytest.raises(ValueError, match="channel lanes"):
+        BankSessionServer(
+            prog, n_slots=4, auto_step=False,
+            engine=ShardedFilterBankEngine(prog, channels=2),
+        )
+
+
+def test_swap_program_refused_on_injected_engine():
+    prog = _program()
+    srv, _ = _sharded_server(prog)
+    with pytest.raises(ValueError, match="injected"):
+        srv.swap_program(_program(taps=TAPS + 2))
+
+
+def test_sessions_on_sharded_engine_bit_exact_no_faults():
+    prog = _program()
+    rng = np.random.default_rng(5)
+    srv, eng = _sharded_server(prog)
+    sels = [[0, 3], [5, 1], [7]]
+    sessions = [srv.open_session(r) for r in sels]
+    streams = [rng.integers(-128, 128, 4 * 100).astype(np.int32)
+               for _ in sels]
+    outs = [[] for _ in sels]
+    for k in range(4):  # 3 tenants over 2 lanes: multi-round steps
+        for i, s in enumerate(sessions):
+            s.push(streams[i][k * 100:(k + 1) * 100])
+        srv.step()
+        for i, s in enumerate(sessions):
+            out = s.pull()
+            if out.shape[1]:
+                outs[i].append(out)
+    for i, sel in enumerate(sels):
+        ref = fir_bit_layers_batch(
+            streams[i][None, :], prog.qbank
+        )[np.asarray(sel), 0]
+        assert np.array_equal(np.concatenate(outs[i], axis=1), ref)
+    # lane dispatches went through the sharded engine, statelessly
+    assert eng._chunk_idx == srv.rounds
+    assert eng.samples_in == 0 and not eng._inflight
+
+
+# ---------------------------------------------------------------------------
+# fault paths: transient retry, corruption heal, attribution, isolation
+# ---------------------------------------------------------------------------
+
+
+def test_transient_fault_is_retried_inside_step_and_attributed():
+    prog = _program()
+    inj = FaultInjector().fail_push(0, at_chunk=1, times=1)
+    srv, _ = _sharded_server(prog, inj)
+    s = srv.open_session([0, 3])
+    x = np.random.default_rng(0).integers(-128, 128, 400).astype(np.int32)
+    got = _stream_one(srv, s, [0, 3], x)
+    ref = fir_bit_layers_batch(x[None, :], prog.qbank)[[0, 3], 0]
+    assert np.array_equal(got, ref)
+    fs = srv.fault_stats()
+    assert srv.step_retries == 1 and fs["transients"] == 1
+    assert fs["session_faults"] == 1 and fs["per_session"][s.session_id] == 1
+
+
+def test_corruption_is_healed_in_call_and_attributed():
+    prog = _program()
+    inj = FaultInjector().corrupt_output(0, at_chunk=1, times=1)
+    srv, _ = _sharded_server(prog, inj, integrity_check=True)
+    s = srv.open_session([1, 2])
+    x = np.random.default_rng(1).integers(-128, 128, 400).astype(np.int32)
+    got = _stream_one(srv, s, [1, 2], x)
+    ref = fir_bit_layers_batch(x[None, :], prog.qbank)[[1, 2], 0]
+    assert np.array_equal(got, ref)
+    fs = srv.fault_stats()
+    assert fs["corruptions"] == 1 and fs["replayed_chunks"] == 1
+    assert srv.step_retries == 0  # healed inside the call, not re-raised
+    assert fs["per_session"][s.session_id] == 1
+
+
+def test_retry_exhaustion_raises_and_leaves_queue_intact():
+    prog = _program()
+    # three consecutive dispatch indices armed: with max_step_retries=1
+    # the second attempt exhausts the budget and step() re-raises
+    inj = (FaultInjector().fail_push(0, at_chunk=1)
+           .fail_push(0, at_chunk=2).fail_push(0, at_chunk=3))
+    eng = ShardedFilterBankEngine(prog, channels=2, fault_injector=inj)
+    srv = BankSessionServer(prog, n_slots=2, auto_step=False, engine=eng,
+                            max_step_retries=1)
+    s = srv.open_session([0])
+    x = np.random.default_rng(2).integers(-128, 128, 300).astype(np.int32)
+    s.push(x[:100])
+    srv.step()
+    delivered = [s.pull()]
+    s.push(x[100:200])
+    with pytest.raises(TransientShardError):
+        srv.step()
+    # nothing consumed, nothing lost: the chunk is still queued and a
+    # later step (fault drained) serves it bit-exactly
+    assert s.queued_samples == 100 and len(s.queue) == 1
+    s.push(x[200:])
+    srv.step()
+    delivered.append(s.pull())
+    got = np.concatenate(delivered, axis=1)
+    ref = fir_bit_layers_batch(x[None, :], prog.qbank)[[0], 0]
+    assert np.array_equal(got, ref)
+    assert srv.step_retries == 3  # two in the failed step, one absorbed
+
+
+def test_faults_attributed_only_to_sessions_in_failed_round():
+    """Per-tenant isolation: 4 tenants over 2 lanes = 2 rounds/step; a
+    transient in ONE round must mark exactly that round's tenants."""
+    prog = _program()
+    inj = FaultInjector().fail_push(0, at_chunk=1, times=1)
+    srv, _ = _sharded_server(prog, inj)
+    sessions = [srv.open_session([i]) for i in range(4)]
+    rng = np.random.default_rng(3)
+    for s in sessions:
+        s.push(rng.integers(-128, 128, 100).astype(np.int32))
+    srv.step()  # round 0 = chunk 0 (clean), round 1 = chunk 1 (faulted)
+    faults = [s.faults for s in sessions]
+    assert faults == [0, 0, 1, 1]
+    assert srv.session_faults == 1
+
+
+# ---------------------------------------------------------------------------
+# forced-8-device legs: real meshes, kills, degradation, crash recovery
+# ---------------------------------------------------------------------------
+
+
+def test_sessions_survive_shard_kills_on_real_mesh():
+    out = run_py(f"""
+import numpy as np
+from repro.compiler import compile_bank
+from repro.distributed.faultbank import FaultInjector
+from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+from repro.serving import BankSessionServer
+
+prog = compile_bank(spread_lowpass_qbank(64, {TAPS}))
+rng = np.random.default_rng(7)
+N, CH = 12, 128
+sels = [np.arange((i * 5) % 60, (i * 5) % 60 + 5) for i in range(N)]
+inj = FaultInjector().kill_shard(1, at_chunk=2).kill_shard(0, at_chunk=5)
+eng = ShardedFilterBankEngine(prog, channels=4, n_bank_shards=4,
+                              fault_injector=inj)
+srv = BankSessionServer(prog, n_slots=4, auto_step=False, engine=eng,
+                        step_budget_us=1e9)
+ss = [srv.open_session(sels[i]) for i in range(N)]
+streams = [rng.integers(-128, 128, CH * 8).astype(np.int32)
+           for _ in range(N)]
+outs = [[] for _ in range(N)]
+for k in range(8):
+    for i, s in enumerate(ss):
+        s.push(streams[i][k * CH:(k + 1) * CH])
+    srv.step()
+    for i, s in enumerate(ss):
+        o = s.pull()
+        if o.shape[1]:
+            outs[i].append(o)
+for i in range(N):
+    ref = fir_bit_layers_batch(streams[i][None, :], prog.qbank)[sels[i], 0]
+    assert np.array_equal(np.concatenate(outs[i], axis=1), ref), i
+fs = srv.fault_stats()
+assert fs["lost_shards"] == 2 and fs["recoveries"] == 2
+assert fs["session_faults"] == 2
+# exact attribution: 12 tenants / 4 lanes = 3 rounds per step, and both
+# kills (dispatch 2 and 5) land in round 2 of their step — the SAME four
+# tenants are marked twice, everyone else stays clean
+assert sorted(fs["per_session"].values()) == [0] * 8 + [2] * 4
+# spare forced-host devices let recovery re-partition at full width
+assert eng.n_bank_shards == 4 and not srv.serve_stats()["degraded"]
+print("KILLS_OK")
+""", devices=8)
+    assert "KILLS_OK" in out
+
+
+def test_degraded_mesh_reprices_admission_and_sheds():
+    out = run_py(f"""
+import numpy as np
+from repro.compiler import compile_bank
+from repro.distributed.faultbank import FaultInjector
+from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+from repro.serving import BankSessionServer
+
+from repro.distributed import bank_mesh
+
+prog = compile_bank(spread_lowpass_qbank(9, {TAPS}))
+rng = np.random.default_rng(8)
+# cascade: three kills degrade the 4x1 mesh to the plain 1x1 engine.
+# The mesh is PINNED to 4 devices so recovery cannot re-partition onto
+# spare forced-host devices — survivors shrink 4 -> 3 -> ... -> degraded
+inj = (FaultInjector().kill_shard(0, at_chunk=1)
+       .kill_shard(1, at_chunk=3).kill_shard(0, at_chunk=5))
+eng = ShardedFilterBankEngine(prog, channels=2, mesh=bank_mesh(4, 1),
+                              n_bank_shards=4, fault_injector=inj)
+srv = BankSessionServer(prog, n_slots=2, auto_step=False, engine=eng,
+                        step_budget_us=1e12)
+s = srv.open_session([0, 4])
+x = rng.integers(-128, 128, 8 * 200).astype(np.int32)
+outs = []
+for k in range(8):
+    s.push(x[k * 200:(k + 1) * 200])
+    srv.step()
+    o = s.pull()
+    if o.shape[1]:
+        outs.append(o)
+ref = fir_bit_layers_batch(x[None, :], prog.qbank)[[0, 4], 0]
+assert np.array_equal(np.concatenate(outs, axis=1), ref)
+st = srv.serve_stats()
+assert st["degraded"] and srv._degraded()
+# admission prices against the LIVE (degraded) plan, finitely
+pred = srv.predicted_step_us(extra_sessions=1)
+assert np.isfinite(pred) and pred > 0
+assert srv.fault_stats()["lost_shards"] == 3
+print("DEGRADED_OK", f"{{pred:.0f}}us")
+""", devices=8)
+    assert "DEGRADED_OK" in out
+
+
+def test_differential_session_chaos_leg(tmp_path):
+    """The harness's sessions × shards leg, journaled, on a real mesh."""
+    out = run_py(f"""
+from tests.differential import random_type1_bank, session_chaos_check
+
+stats = session_chaos_check(
+    random_type1_bank(12, taps={TAPS}, seed=5),
+    [(1, 3), (0, 9)],
+    n_bank_shards=4,
+    journal_path={str(tmp_path / "wal")!r},
+)
+assert stats["detections"] == 2 and stats["n_bank_shards"] >= 1
+print("SESSION_CHAOS_OK", stats["replayed_chunks"])
+""", devices=8)
+    assert "SESSION_CHAOS_OK" in out
+
+
+def test_chaos_64_sessions_8_shards_kill_and_sigkill_recovery(tmp_path):
+    """The acceptance chaos test: 64 tenants over an 8-shard mesh
+    survive (a) a mid-step shard kill and (b) a SIGKILL of the whole
+    serving process followed by `recover()` — every session's
+    concatenated output bit-exact vs an uninterrupted dedicated run,
+    with exact fault accounting."""
+    wal = str(tmp_path / "wal")
+    setup = f"""
+import numpy as np
+from repro.compiler import compile_bank
+from repro.distributed.faultbank import FaultInjector
+from repro.filters import (ShardedFilterBankEngine, fir_bit_layers_batch,
+                           spread_lowpass_qbank)
+from repro.serving import BankSessionServer
+
+TAPS, N, CH, SLOTS = {TAPS}, 64, 128, 8
+qbank = spread_lowpass_qbank(64, TAPS)
+prog = compile_bank(qbank)
+sels = [[i % 64, (i * 7 + 3) % 64] for i in range(N)]
+
+def chunks_for(n_steps):
+    rng = np.random.default_rng(21)
+    out = [[] for _ in range(N)]
+    for _ in range(n_steps):
+        for i in range(N):
+            out[i].append(rng.integers(-128, 128, CH).astype(np.int32))
+    return out
+"""
+    victim = run_py_raw(setup + f"""
+import os, signal
+# 64 tenants / 8 lanes = 8 rounds per step; chunk 12 lands mid-step 2
+inj = FaultInjector().kill_shard(3, at_chunk=12)
+eng = ShardedFilterBankEngine(prog, channels=SLOTS, n_bank_shards=8,
+                              fault_injector=inj)
+srv = BankSessionServer(prog, n_slots=SLOTS, auto_step=False, engine=eng,
+                        step_budget_us=1e12, journal={wal!r},
+                        snapshot_every=2)
+ss = [srv.open_session(sels[i], session_id=f"t{{i}}") for i in range(N)]
+chunks = chunks_for(4)
+for k in range(3):
+    for i, s in enumerate(ss):
+        s.push(chunks[i][k])
+    srv.step()
+    for s in ss:
+        s.pull()
+fs = srv.fault_stats()
+assert fs["lost_shards"] == 1 and fs["recoveries"] == 1, fs
+assert fs["session_faults"] == 1, fs
+assert sorted(fs["per_session"].values()) == [0] * 56 + [1] * 8, fs
+assert eng.n_bank_shards == 7
+for i, s in enumerate(ss):   # chunk 4: journaled, queued, never stepped
+    s.push(chunks[i][3])
+print("VICTIM_OK", flush=True)
+os.kill(os.getpid(), signal.SIGKILL)
+""", devices=8, timeout=600)
+    assert victim.returncode == -signal.SIGKILL, (
+        victim.stdout + victim.stderr
+    )
+    assert "VICTIM_OK" in victim.stdout
+
+    out = run_py(setup + f"""
+eng = ShardedFilterBankEngine(prog, channels=SLOTS, n_bank_shards=8)
+srv = BankSessionServer.recover({wal!r}, prog, engine=eng,
+                                step_budget_us=1e12)
+assert len(srv.sessions) == N
+chunks = chunks_for(5)
+outs = [[] for _ in range(N)]
+ss = [srv.sessions[f"t{{i}}"] for i in range(N)]
+for i, s in enumerate(ss):
+    out = s.pull()           # regenerated, journal-trimmed
+    if out.shape[1]:
+        outs[i].append(out)
+for i, s in enumerate(ss):   # one more chunk after recovery
+    s.push(chunks[i][4])
+srv.step()
+for i, s in enumerate(ss):
+    out = s.pull()
+    if out.shape[1]:
+        outs[i].append(out)
+n_pre = 3 * CH - (TAPS - 1)  # delivered by the victim before the crash
+for i in range(N):
+    x = np.concatenate(chunks[i])
+    ref = fir_bit_layers_batch(x[None, :], qbank)[np.asarray(sels[i]), 0]
+    got = np.concatenate(outs[i], axis=1)
+    assert got.shape[1] == 2 * CH, (i, got.shape)   # chunks 4+5, no gaps
+    assert np.array_equal(got, ref[:, n_pre:n_pre + got.shape[1]]), i
+    assert ss[i].samples_in == 5 * CH
+srv.close()
+print("CHAOS_OK")
+""", devices=8, timeout=600)
+    assert "CHAOS_OK" in out
