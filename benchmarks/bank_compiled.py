@@ -1,0 +1,336 @@
+"""Compiled-lane bank kernel throughput with roofline verification.
+
+For the B=256 reference bank (63 taps, spread lowpass cutoffs) this
+benchmark measures the scheduled bank kernel on
+
+  * ``interpret``      — the autotuned interpret-lane dispatch (the
+    historic CI arm every BENCH_fir number was recorded on), and
+  * ``xla@merge=M/bt=N`` — the fused CPU-compiled XLA lowering
+    (`repro.kernels.blmac_fir._bank_call_xla`) at each compiled
+    ``(merge, bank_tile)`` variant, including the geometry the compiled
+    autotuner sweep (`autotune_bank_dispatch(compiled=...)`) picks.
+
+Every arm is checked bit-exact against `fir_bit_layers_batch` before any
+timing; arms are interleaved round-robin (rotating which arm goes first
+each repeat) so cache warmth never favors a position, and each arm
+reports its fastest repeat.
+
+Roofline columns: per compiled variant the benchmark statically analyzes
+the variant's own compiled HLO with `repro.roofline.hlo_analysis`
+(summed over tile groups) and divides by *measured* host peaks — int32
+and f32 matmul probes for FLOP/s (each superlayer priced against the
+unit it actually runs on, see `f32_dot_safe`), a large-array copy probe
+for bytes/s — giving ``roofline_us`` (the light-speed bound for that
+variant) and
+``utilization = roofline_us / measured_us``.  The interpret arm has no
+compiled HLO, so its roofline columns are null.  `analyze_hlo` is
+fusion-optimistic on CPU HLO (see docs/benchmarks.md), so utilizations
+are conservative.
+
+Results land in ``BENCH_compiled.json`` at the repo root (the committed
+copy is the CI baseline) plus a per-variant breakdown in
+``benchmarks/out/bank_compiled_breakdown.json``.
+
+The CI gate (``--check``) enforces the acceptance floor — the best
+compiled variant must beat the interpret arm by ``>= --floor`` (default
+1.5x) at B=256, measured in the same run so it transfers across runner
+hardware — plus a tolerance band against the committed speedup.
+
+Usage:
+  python benchmarks/bank_compiled.py                   # full run, writes JSON
+  python benchmarks/bank_compiled.py --fast            # CI smoke sizes
+  python benchmarks/bank_compiled.py --fast --check BENCH_compiled.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+BANK_SIZE = 256
+TAPS = 63
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_compiled.json")
+BREAKDOWN_PATH = os.path.join(
+    os.path.dirname(__file__), "out", "bank_compiled_breakdown.json"
+)
+
+
+def measure_peaks(repeats: int = 3) -> dict:
+    """Measured host peaks the roofline divides by: int32 AND f32 matmul
+    FLOP/s (the compiled variants mix both — f32-safe superlayers run on
+    the float GEMM units, see `f32_dot_safe`) plus large-copy bytes/s —
+    the same units `analyze_hlo` counts."""
+    import jax
+    import jax.numpy as jnp
+
+    m, k, n = 256, 256, 65536
+
+    def probe(dtype, **dot_kwargs):
+        a = jnp.ones((m, k), dtype)
+        b = jnp.ones((k, n), dtype)
+        dot = jax.jit(lambda a, b: jnp.dot(a, b, **dot_kwargs))
+        dot(a, b).block_until_ready()
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            dot(a, b).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return 2.0 * m * k * n / best
+
+    peak_int32 = probe(jnp.int32, preferred_element_type=jnp.int32)
+    peak_f32 = probe(jnp.float32)
+
+    big = jnp.ones((64 << 20) // 4, jnp.int32)  # 64 MiB, past any LLC
+    copy = jax.jit(lambda x: x + 1)
+    copy(big).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        copy(big).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    peak_bw = 2.0 * big.size * 4 / best  # read + write
+    return {"peak_int32_flops": peak_int32, "peak_f32_flops": peak_f32,
+            "peak_hbm_bytes_per_s": peak_bw}
+
+
+def _variant_hlo_cost(program, schedule, taps: int, tile: int, chunk: int):
+    """Static FLOPs/bytes of one compiled variant: `analyze_hlo` over the
+    lowered `_bank_call_xla` of every tile group, summed.  Also returns
+    the portion of the dot FLOPs that runs on the f32 GEMM units (the
+    exact-f32 superlayers, `f32_dot_safe`) so the roofline can price each
+    contraction against the right measured peak."""
+    import jax.numpy as jnp
+
+    from repro.kernels.blmac_fir import (TRITS_PER_WORD, _bank_call_xla,
+                                         f32_dot_safe, frame_signal_batch)
+    from repro.roofline.hlo_analysis import CompCost, analyze_hlo
+
+    frames, _ = frame_signal_batch(jnp.zeros((1, chunk), jnp.int32), taps,
+                                   tile)
+    n_chan, n_tiles, _ = frames.shape
+    signal = n_chan * n_tiles * tile
+    total, f32_flops = CompCost(), 0.0
+    for g in schedule.groups:
+        if not g.sel_layers:
+            continue
+        op = jnp.asarray(g.packed.view(np.int32))
+        text = _bank_call_xla.lower(
+            frames, op, taps=taps, schedule=g.schedule,
+            tail_shift=g.tail_shift, tile=tile,
+        ).compile().as_text()
+        total.add(analyze_hlo(text))
+        b_pad, _, n_words = op.shape
+        m_pad = n_words * TRITS_PER_WORD
+        for _, parts in g.schedule:
+            if f32_dot_safe(m_pad, parts):
+                f32_flops += 2.0 * b_pad * m_pad * signal
+    return total, f32_flops
+
+
+def _interleaved_times(arms: dict, repeats: int) -> dict:
+    """Fastest wall time per arm, arms interleaved with rotating start."""
+    for fn in arms.values():
+        fn()  # warm-up: compile + stage operands
+    names = list(arms)
+    best = {name: float("inf") for name in names}
+    for r in range(repeats):
+        for name in names[r % len(names):] + names[: r % len(names)]:
+            t0 = time.perf_counter()
+            arms[name]()
+            best[name] = min(best[name], time.perf_counter() - t0)
+    return best
+
+
+def run(n_samples: int = 16384, repeats: int = 3, verbose: bool = True,
+        n_filters: int = BANK_SIZE, taps: int = TAPS) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.compiler import compile_bank
+    from repro.filters import fir_bit_layers_batch, spread_lowpass_qbank
+    from repro.kernels.blmac_fir import blmac_fir_bank
+    from repro.kernels.runtime import (COMPILED_MERGE_CANDIDATES,
+                                       DEFAULT_TILE, autotune_bank_dispatch,
+                                       resolve_lane)
+
+    qbank = spread_lowpass_qbank(n_filters, taps)
+    program = compile_bank(qbank)
+    rng = np.random.default_rng(42)
+    x = rng.integers(-128, 128, n_samples).astype(np.int32)
+    xj = jnp.asarray(x)
+    n_out = n_samples - taps + 1
+    ref = fir_bit_layers_batch(x, qbank)[:, 0, :]
+
+    lane = resolve_lane(True)  # this host's compiled lane
+    plan_i, sched_i = autotune_bank_dispatch(program, chunk_hint=n_samples)
+    plan_c, _ = autotune_bank_dispatch(program, chunk_hint=n_samples,
+                                       compiled=lane)
+
+    # variant grid: the compiled merge candidates at the default bank
+    # tile, always including whatever geometry the compiled sweep picked
+    geoms = [(m, None) for m in COMPILED_MERGE_CANDIDATES]
+    if plan_c.lane != "interpret" and (plan_c.merge, None) not in geoms:
+        geoms.append((plan_c.merge, plan_c.bank_tile))
+
+    arms, rows = {}, []
+
+    def make_arm(schedule, tile, arm_lane):
+        def f():
+            blmac_fir_bank(
+                xj, program.packed, taps, tile=tile, schedule=schedule,
+                fast_path=False, lane=arm_lane,
+            ).block_until_ready()
+        return f
+
+    def verify(schedule, tile, arm_lane, name):
+        y = np.asarray(blmac_fir_bank(
+            xj, program.packed, taps, tile=tile, schedule=schedule,
+            fast_path=False, lane=arm_lane,
+        ))[..., :n_out]
+        if not np.array_equal(y, ref):
+            raise AssertionError(f"arm {name} is not bit-exact")
+
+    verify(sched_i, plan_i.tile, "interpret", "interpret")
+    arms["interpret"] = make_arm(sched_i, plan_i.tile, "interpret")
+    rows.append({"arm": "interpret", "lane": "interpret",
+                 "merge": plan_i.merge, "bank_tile": plan_i.bank_tile,
+                 "tile": plan_i.tile, "autotuned": True})
+
+    peaks = measure_peaks(repeats)
+    for merge, bt in geoms:
+        schedule = program.schedule(bt, merge)
+        name = f"{lane}@merge={merge}/bt={schedule.tile_size}"
+        verify(schedule, DEFAULT_TILE, lane, name)
+        arms[name] = make_arm(schedule, DEFAULT_TILE, lane)
+        cost, f32_flops = _variant_hlo_cost(program, schedule, taps,
+                                            DEFAULT_TILE, n_samples)
+        int_flops = max(cost.flops - f32_flops, 0.0)
+        compute_s = (f32_flops / peaks["peak_f32_flops"]
+                     + int_flops / peaks["peak_int32_flops"])
+        roofline_us = max(compute_s,
+                          cost.hbm_bytes / peaks["peak_hbm_bytes_per_s"]) * 1e6
+        rows.append({
+            "arm": name, "lane": lane, "merge": merge,
+            "bank_tile": schedule.tile_size, "tile": DEFAULT_TILE,
+            "autotuned": (merge, bt) == (plan_c.merge, plan_c.bank_tile),
+            "hlo_flops": cost.flops, "hlo_f32_flops": f32_flops,
+            "hlo_hbm_bytes": cost.hbm_bytes,
+            "roofline_us": roofline_us,
+        })
+
+    times = _interleaved_times(arms, repeats)
+    t_interp = times["interpret"]
+    for row in rows:
+        t = times[row["arm"]]
+        row["seconds"] = t
+        row["samples_per_s_per_filter"] = n_out / t
+        row["speedup_vs_interpret"] = t_interp / t
+        if "roofline_us" in row:
+            row["roofline_utilization"] = row["roofline_us"] / (t * 1e6)
+        else:
+            row["roofline_us"] = None
+            row["roofline_utilization"] = None
+        if verbose:
+            util = (f"  util {row['roofline_utilization']:.3f}"
+                    if row["roofline_utilization"] is not None else "")
+            print(f"{row['arm']:24s} {t * 1e3:9.2f} ms  "
+                  f"{row['samples_per_s_per_filter']:12.0f} samples/s/filter"
+                  f"  ({row['speedup_vs_interpret']:.2f}x interpret){util}")
+
+    best = max((r for r in rows if r["lane"] != "interpret"),
+               key=lambda r: r["speedup_vs_interpret"])
+    return {
+        "benchmark": "bank_compiled",
+        "backend": jax.default_backend(),
+        "lane": lane,
+        "bank_size": n_filters,
+        "taps": taps,
+        "n_samples": n_samples,
+        "autotuned_plan": {"lane": plan_c.lane, "merge": plan_c.merge,
+                           "bank_tile": plan_c.bank_tile,
+                           "tile": plan_c.tile, "mode": plan_c.mode},
+        "compiled_speedup": best["speedup_vs_interpret"],
+        "best_arm": best["arm"],
+        **peaks,
+        "rows": rows,
+    }
+
+
+def write_breakdown(result: dict, path: str = BREAKDOWN_PATH) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+        f.write("\n")
+
+
+def check(result: dict, committed_path: str, tolerance: float,
+          floor: float) -> int:
+    """Fail (non-zero) unless the same-run compiled-vs-interpret speedup
+    clears the absolute acceptance floor AND stays within ``tolerance``
+    of the committed baseline ratio."""
+    with open(committed_path) as f:
+        committed = json.load(f)
+    status = 0
+    sp = result["compiled_speedup"]
+    flag = "OK" if sp >= floor else "REGRESSION"
+    print(f"check compiled floor: {sp:.2f}x >= {floor:.2f}x required  {flag}")
+    if flag != "OK":
+        status = 1
+    old = committed["compiled_speedup"]
+    ratio = sp / old
+    flag = "OK" if ratio >= 1.0 - tolerance else "REGRESSION"
+    print(f"check compiled speedup: {sp:.2f}x vs committed {old:.2f}x "
+          f"({ratio:.2f}x)  {flag}")
+    if flag != "OK":
+        status = 1
+    for row in result["rows"]:
+        if row["roofline_utilization"] is None:
+            continue
+        if not 0.0 < row["roofline_utilization"] <= 2.0:
+            # >1 means the fusion-optimistic static model undercounted
+            # or the peak probe ran slow (the probe is itself a timed
+            # GEMM on a shared box); far above 1 (or <= 0) means the
+            # analyzer or probe broke
+            print(f"check {row['arm']}: roofline utilization "
+                  f"{row['roofline_utilization']:.3f} out of (0, 2.0]  "
+                  f"REGRESSION")
+            status = 1
+    return status
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="CI smoke sizes (no JSON rewrite)")
+    ap.add_argument("--check", metavar="JSON",
+                    help="compare against a committed BENCH_compiled.json")
+    ap.add_argument("--tolerance", type=float, default=0.25)
+    ap.add_argument("--floor", type=float, default=1.5,
+                    help="absolute compiled-vs-interpret speedup floor "
+                         "at B=256 (the PR acceptance bar)")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args()
+    if args.check and not os.path.exists(args.check):
+        ap.error(f"baseline not found: {args.check}")
+    n_samples = 8192 if args.fast else 16384
+    repeats = 2 if args.fast else 5
+    result = run(n_samples=n_samples, repeats=repeats)
+    write_breakdown(result)
+    if args.check:
+        return check(result, args.check, args.tolerance, args.floor)
+    if not args.fast:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+        print(f"wrote {os.path.normpath(args.out)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

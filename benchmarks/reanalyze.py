@@ -1,5 +1,16 @@
-"""Re-derive roofline JSONs from the saved (gzipped) HLO — lets analyzer
-improvements update §Roofline without recompiling 68 cells."""
+"""Re-derive analysis columns of committed artifacts without re-measuring.
+
+Two sections:
+
+* **dryrun** — re-derive the §Roofline JSONs from the saved (gzipped)
+  HLO — lets analyzer improvements update the table without recompiling
+  68 cells.
+* **compiled** — re-derive `BENCH_compiled.json`'s roofline columns
+  (`roofline_us`, `roofline_utilization`, `compiled_speedup`,
+  `best_arm`) from the stored raw values — HLO FLOP/byte counts and
+  measured peaks — so a formula change does not require re-timing the
+  arms on the reference box.
+"""
 import glob
 import gzip
 import json
@@ -11,28 +22,76 @@ from repro.roofline.hlo_analysis import analyze_hlo  # noqa: E402
 
 PEAK, HBM_BW, ICI_BW = 197e12, 819e9, 50e9
 OUT = os.path.join(os.path.dirname(__file__), "out", "dryrun")
+BENCH_COMPILED = os.path.join(
+    os.path.dirname(__file__), "..", "BENCH_compiled.json"
+)
 
-for jf in sorted(glob.glob(os.path.join(OUT, "*.json"))):
-    hf = jf[:-5] + ".hlo.txt.gz"
-    if not os.path.exists(hf):
-        continue
-    r = json.load(open(jf))
-    cost = analyze_hlo(gzip.open(hf, "rt").read())
-    r["hlo_flops_per_dev"] = cost.flops
-    r["hlo_hbm_bytes_per_dev"] = cost.hbm_bytes
-    r["collective_bytes_per_dev"] = cost.total_coll_bytes
-    r["collectives"] = cost.coll_bytes
-    r["collective_counts"] = cost.coll_counts
-    r["hbm_by_op"] = dict(sorted(cost.hbm_by_op.items(), key=lambda kv: -kv[1])[:12])
-    r["compute_term_s"] = cost.flops / PEAK
-    r["memory_term_s"] = cost.hbm_bytes / HBM_BW
-    r["collective_term_s"] = cost.total_coll_bytes / ICI_BW
-    terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
-             "collective": r["collective_term_s"]}
-    r["dominant"] = max(terms, key=terms.get)
-    r["useful_flops_ratio"] = (r["model_flops_per_dev"] / cost.flops
-                               if cost.flops else 0.0)
-    json.dump(r, open(jf, "w"), indent=1)
-    print(os.path.basename(jf), "->", r["dominant"],
-          f"c={r['compute_term_s']:.3f} m={r['memory_term_s']:.3f} "
-          f"x={r['collective_term_s']:.3f}")
+
+def reanalyze_dryrun() -> None:
+    for jf in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        hf = jf[:-5] + ".hlo.txt.gz"
+        if not os.path.exists(hf):
+            continue
+        r = json.load(open(jf))
+        cost = analyze_hlo(gzip.open(hf, "rt").read())
+        r["hlo_flops_per_dev"] = cost.flops
+        r["hlo_hbm_bytes_per_dev"] = cost.hbm_bytes
+        r["collective_bytes_per_dev"] = cost.total_coll_bytes
+        r["collectives"] = cost.coll_bytes
+        r["collective_counts"] = cost.coll_counts
+        r["hbm_by_op"] = dict(
+            sorted(cost.hbm_by_op.items(), key=lambda kv: -kv[1])[:12]
+        )
+        r["compute_term_s"] = cost.flops / PEAK
+        r["memory_term_s"] = cost.hbm_bytes / HBM_BW
+        r["collective_term_s"] = cost.total_coll_bytes / ICI_BW
+        terms = {"compute": r["compute_term_s"], "memory": r["memory_term_s"],
+                 "collective": r["collective_term_s"]}
+        r["dominant"] = max(terms, key=terms.get)
+        r["useful_flops_ratio"] = (r["model_flops_per_dev"] / cost.flops
+                                   if cost.flops else 0.0)
+        json.dump(r, open(jf, "w"), indent=1)
+        print(os.path.basename(jf), "->", r["dominant"],
+              f"c={r['compute_term_s']:.3f} m={r['memory_term_s']:.3f} "
+              f"x={r['collective_term_s']:.3f}")
+
+
+def reanalyze_compiled(path: str = BENCH_COMPILED) -> None:
+    """Recompute BENCH_compiled.json's derived roofline columns from its
+    stored raw measurements (same formula as bank_compiled.run)."""
+    if not os.path.exists(path):
+        return
+    r = json.load(open(path))
+    t_interp = next(
+        row["seconds"] for row in r["rows"] if row["lane"] == "interpret"
+    )
+    for row in r["rows"]:
+        row["speedup_vs_interpret"] = t_interp / row["seconds"]
+        if row.get("hlo_flops") is None:
+            row["roofline_us"] = None
+            row["roofline_utilization"] = None
+            continue
+        f32 = row.get("hlo_f32_flops", 0.0)
+        int_flops = max(row["hlo_flops"] - f32, 0.0)
+        compute_s = (f32 / r["peak_f32_flops"]
+                     + int_flops / r["peak_int32_flops"])
+        row["roofline_us"] = max(
+            compute_s, row["hlo_hbm_bytes"] / r["peak_hbm_bytes_per_s"]
+        ) * 1e6
+        row["roofline_utilization"] = (
+            row["roofline_us"] / (row["seconds"] * 1e6)
+        )
+    best = max((row for row in r["rows"] if row["lane"] != "interpret"),
+               key=lambda row: row["speedup_vs_interpret"])
+    r["compiled_speedup"] = best["speedup_vs_interpret"]
+    r["best_arm"] = best["arm"]
+    with open(path, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(os.path.basename(path), "->",
+          f"best={r['best_arm']} {r['compiled_speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    reanalyze_dryrun()
+    reanalyze_compiled()

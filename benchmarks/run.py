@@ -102,6 +102,21 @@ def bench_kernel_bank() -> None:
          f"vs_per_filter={r['speedup']:.2f}x")
 
 
+def bench_bank_compiled() -> None:
+    """Compiled-lane bank kernel vs interpret, with roofline utilization
+    (full grid + BENCH_compiled.json: benchmarks/bank_compiled.py)."""
+    from benchmarks import bank_compiled
+
+    result = bank_compiled.run(n_samples=4096, repeats=2, verbose=False)
+    best = next(r for r in result["rows"] if r["arm"] == result["best_arm"])
+    util = best["roofline_utilization"]
+    derived = (f"lane={result['lane']};best={result['best_arm']};"
+               f"vs_interpret={result['compiled_speedup']:.2f}x")
+    if util is not None:
+        derived += f";roofline_util={util:.2f}"
+    _row("bank_compiled", best["seconds"] * 1e6, derived)
+
+
 def bench_kernel_pulse_matmul() -> None:
     """CSD-P pulse-code matmul vs quantization error / storage."""
     import jax.numpy as jnp
@@ -158,6 +173,7 @@ def main() -> None:
     bench_table4_machine()
     bench_kernel_blmac_fir()
     bench_kernel_bank()
+    bench_bank_compiled()
     bench_kernel_pulse_matmul()
     bench_roofline_summary()
 

@@ -13,6 +13,10 @@ is ``(C, T)`` or ``(T,)`` integer samples) for:
     (`specialized_program` LRU) from ``program.pulse_schedules()``. int32.
   * ``"scheduled"``   — the sparsity-scheduled bank kernel on
     ``program.packed`` with the memoized ``program.schedule()``. int32.
+    Takes a ``lane`` argument selecting the execution lane: ``None``
+    (legacy pallas_call + ``interpret``), ``"interpret"``, ``"mosaic"``
+    (TPU), ``"triton"`` (GPU) or ``"xla"`` — the fused CPU-compiled
+    lowering (`repro.kernels.blmac_fir._bank_call_xla`).
   * ``"vmachine"``    — the vectorized §4 machine simulator programmed
     with the bank; the executable exposes ``.vmachine`` and ``.fits``
     (weight-memory verdicts). int64.
@@ -72,13 +76,56 @@ def lower(
     interpret: bool | None = None,
     machine_spec=None,
     mesh=None,
+    lane: str | None = None,
 ) -> Lowered:
     """Lower ``program`` to an executable for ``backend`` (see module doc).
 
-    ``channels``/``mesh`` configure the sharded engine (the other
-    backends infer C from the input); ``tile``/``bank_tile``/``merge``
-    pin kernel geometry; ``machine_spec`` is the vmachine's
-    `MachineSpec` (default: the paper's parameters at this tap count).
+    Parameters
+    ----------
+    program : BlmacProgram
+        The compiled artifact (from `compile_bank` / `compile_packed` /
+        `BlmacProgram.load`).
+    backend : str
+        One of `BACKENDS`.
+    channels, mesh
+        Configure the sharded engine (the other backends infer C from
+        the input).
+    tile, bank_tile, merge
+        Pin kernel geometry (None = defaults / memoized heuristics).
+    interpret : bool | None
+        Pallas interpret override for the kernel backends.
+    machine_spec : repro.core.MachineSpec | None
+        The vmachine's spec (default: the paper's parameters at this
+        tap count).
+    lane : str | None
+        Execution lane for the ``"scheduled"`` backend (see module doc);
+        ignored by the others.
+
+    Returns
+    -------
+    Lowered
+        Callable ``exe(x) -> (B, C, n_out)`` with backend-specific
+        attributes (``.schedule``, ``.vmachine``, ``.fits``, ``.engine``).
+
+    Raises
+    ------
+    TypeError
+        ``program`` is not a `BlmacProgram`.
+    ValueError
+        Unknown ``backend``.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.compiler import compile_bank, lower
+    >>> bank = np.zeros((2, 15), np.int64)
+    >>> bank[:, 7] = [64, 96]
+    >>> prog = compile_bank(bank)
+    >>> x = np.arange(30, dtype=np.int64)
+    >>> y_oracle = lower(prog, "oracle")(x)
+    >>> y_xla = lower(prog, "scheduled", lane="xla", interpret=True)(x)
+    >>> bool((y_oracle == y_xla).all())          # bit-exact across lanes
+    True
     """
     if not isinstance(program, BlmacProgram):
         raise TypeError("lower() needs a BlmacProgram — call compile_bank")
@@ -126,6 +173,7 @@ def lower(
             return np.asarray(blmac_fir_bank(
                 _as_channels(x), program.packed, program.taps, tile,
                 interpret=interpret, schedule=sched, fast_path=False,
+                lane=lane,
             ))
 
         return Lowered(run_scheduled, backend, program, schedule=sched)

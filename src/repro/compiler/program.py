@@ -143,9 +143,10 @@ def _memo_put(memo: dict, key, value, cap: int) -> None:
 # per-program memo bounds: schedules/subprograms embed packed-bank copies
 # (the quantity the old bounded autotune cache deliberately limited), so
 # cap them instead of growing forever.  The schedule cap must cover the
-# autotuner's full sweep width (2 bank-tile candidates × 3 merge
-# candidates = 6 geometries) or repeated sweeps thrash the memo.
-SCHEDULE_MEMO_MAX = 8
+# autotuner's full sweep width (2 bank-tile candidates × 3 interpret
+# merge candidates + 2 × 3 compiled merge candidates = 12 geometries)
+# or repeated sweeps thrash the memo.
+SCHEDULE_MEMO_MAX = 16
 SUBPROGRAM_MEMO_MAX = 32
 
 
@@ -314,7 +315,34 @@ class BlmacProgram:
 
     def partition(self, n_shards: int):
         """Memoized occupancy-balanced `BankPartition` over ``n_shards``
-        (the sharded engine's and mesh autotuner's shared plan hook)."""
+        (the sharded engine's and mesh autotuner's shared plan hook).
+
+        Parameters
+        ----------
+        n_shards : int
+            Number of contiguous (post-occupancy-sort) filter shards.
+
+        Returns
+        -------
+        repro.distributed.sharding.BankPartition
+            ``.assign`` lists each shard's original filter indices;
+            ``.imbalance`` is max/mean predicted shard cost.
+
+        Raises
+        ------
+        ValueError
+            ``n_shards < 1`` or more shards than filters.
+
+        Examples
+        --------
+        >>> import numpy as np
+        >>> from repro.compiler import compile_bank
+        >>> bank = np.zeros((4, 15), np.int64)
+        >>> bank[:, 7] = [64, 96, 160, 224]
+        >>> part = compile_bank(bank).partition(2)
+        >>> sorted(len(rows) for rows in part.assign)
+        [2, 2]
+        """
         from ..distributed.sharding import partition_bank
 
         n_shards = int(n_shards)
@@ -330,6 +358,35 @@ class BlmacProgram:
         order) — array slices of this program, no recompilation.  Memoized
         here AND registered content-addressed, so the sharded autotuner
         and the sharded engine asking for the same shard get one object.
+
+        Parameters
+        ----------
+        rows : sequence of int
+            Original filter indices, in the order the subprogram should
+            serve them.
+
+        Returns
+        -------
+        BlmacProgram
+            The sliced program (same taps/spec, ``len(rows)`` filters).
+
+        Raises
+        ------
+        IndexError
+            A row index is out of range for this bank.
+
+        Examples
+        --------
+        >>> import numpy as np
+        >>> from repro.compiler import compile_bank
+        >>> bank = np.zeros((3, 15), np.int64)
+        >>> bank[:, 7] = [64, 96, 160]
+        >>> prog = compile_bank(bank)
+        >>> sub = prog.select([2, 0])
+        >>> sub.n_filters, [int(w) for w in sub.qbank[:, 7]]
+        (2, [160, 64])
+        >>> prog.select([2, 0]) is sub               # memoized
+        True
         """
         rows = np.asarray(rows, np.int64)
         memo = rows.tobytes()
@@ -358,16 +415,17 @@ class BlmacProgram:
     # -- cost-model reads ----------------------------------------------------
 
     def predict_specialized_us(
-        self, channels: int, n_tiles: int
+        self, channels: int, n_tiles: int, cal=None
     ) -> float:
         """Modelled per-dispatch latency of the per-filter specialized
         loop — `repro.core.costmodel.predict_specialized_us` with every
-        bank-derived input read off the program."""
+        bank-derived input read off the program.  ``cal`` optionally
+        selects a per-lane `BackendCalibration` constant set."""
         from ..core.costmodel import predict_specialized_us
 
         return predict_specialized_us(
             self.n_filters, channels, n_tiles, self.taps,
-            self.mean_pulses, self.n_layers,
+            self.mean_pulses, self.n_layers, cal=cal,
         )
 
     def predict_scheduled_us(
@@ -377,15 +435,29 @@ class BlmacProgram:
         tile: int,
         bank_tile: int | None = None,
         merge: int | None = None,
+        cal=None,
     ) -> float:
         """Modelled per-dispatch latency of the scheduled bank path for
-        one geometry, costed on the memoized schedule."""
+        one geometry, costed on the memoized schedule.  ``cal``
+        optionally selects a per-lane `BackendCalibration` constant
+        set (default: the interpret reference constants).  The exact
+        schedule also decides ``f32_safe`` — whether EVERY superlayer's
+        digit bound admits the xla lane's exact-f32 contraction
+        (`repro.kernels.blmac_fir.f32_dot_safe`), which prices MACs at
+        the lane's f32 GEMM rate."""
         from ..core.costmodel import predict_scheduled_us
+        from ..kernels.blmac_fir import f32_dot_safe
 
         sched = self.schedule(bank_tile, merge)
+        m_pad = self.n_words * TRITS_PER_WORD
+        f32_safe = all(
+            f32_dot_safe(m_pad, parts)
+            for g in sched.groups
+            for _, parts in g.schedule
+        )
         return predict_scheduled_us(
-            channels, n_tiles, tile, self.n_words * TRITS_PER_WORD,
-            sched.group_summaries(),
+            channels, n_tiles, tile, m_pad,
+            sched.group_summaries(), cal=cal, f32_safe=f32_safe,
         )
 
     # -- serialization -------------------------------------------------------
@@ -395,7 +467,31 @@ class BlmacProgram:
         a JSON header (format version, geometry, content key) — a serving
         process `load`s it and warm-starts without recompiling.  The
         write is atomic (tmp file + rename): a killed process leaves the
-        previous file intact, never a truncated one."""
+        previous file intact, never a truncated one.
+
+        Parameters
+        ----------
+        path : str | os.PathLike
+            Destination file (conventionally ``*.npz``); parent
+            directory must exist.
+
+        Raises
+        ------
+        OSError
+            The destination is not writable.
+
+        Examples
+        --------
+        >>> import numpy as np, os, tempfile
+        >>> from repro.compiler import BlmacProgram, compile_bank
+        >>> bank = np.zeros((2, 15), np.int64)
+        >>> bank[:, 7] = [64, 96]
+        >>> prog = compile_bank(bank)
+        >>> path = os.path.join(tempfile.mkdtemp(), "bank.npz")
+        >>> prog.save(path)
+        >>> BlmacProgram.load(path) is prog      # content-addressed hit
+        True
+        """
         header = {
             "format_version": PROGRAM_FORMAT_VERSION,
             "kind": "blmac_program",
@@ -431,6 +527,31 @@ class BlmacProgram:
         to recompiling.  The loaded program is registered content-
         addressed, so later `compile_bank` calls for the same bank hit
         it instead of recompiling.
+
+        Parameters
+        ----------
+        path : str | os.PathLike
+            A file written by `save`.
+
+        Returns
+        -------
+        BlmacProgram
+            The loaded (or cache-hit) program.
+
+        Raises
+        ------
+        ProgramFormatError
+            Wrong version, unreadable archive, digest mismatch, or
+            coefficients that do not decode from the stored trits.
+
+        Examples
+        --------
+        >>> from repro.compiler import BlmacProgram, ProgramFormatError
+        >>> try:
+        ...     BlmacProgram.load("/nonexistent/bank.npz")
+        ... except ProgramFormatError:
+        ...     print("fall back to compile_bank")
+        fall back to compile_bank
         """
         try:
             with np.load(path, allow_pickle=False) as z:
@@ -505,13 +626,46 @@ def compile_bank(coeffs, spec: CompileSpec | None = None) -> BlmacProgram:
     """Compile a filter bank to a `BlmacProgram` — THE entry point of the
     one-program/five-backends pipeline.
 
-    ``coeffs`` is ``(B, taps)`` (or ``(taps,)``) odd symmetric type-I
-    coefficients: float input is quantized per-row the paper's way
-    (§3.2, `po2_quantize_batch` at ``spec.coeff_bits``); integer input is
-    taken as already quantized.  Content-addressed: the same bank
-    compiles once per process (then per `save` file across processes) —
-    every engine, autotuner and predictor shares the artifact and its
-    memoized schedules, partitions and cycle predictions.
+    Content-addressed: the same bank compiles once per process (then per
+    `save` file across processes) — every engine, autotuner and
+    predictor shares the artifact and its memoized schedules, partitions
+    and cycle predictions.
+
+    Parameters
+    ----------
+    coeffs : (B, taps) or (taps,) array
+        Odd symmetric type-I coefficients.  Float input is quantized
+        per-row the paper's way (§3.2, `po2_quantize_batch` at
+        ``spec.coeff_bits``); integer input is taken as already
+        quantized.
+    spec : CompileSpec | None
+        Compilation parameters (quantization width, sample bits, CSD
+        layer count); part of the content address.
+
+    Returns
+    -------
+    BlmacProgram
+        The compiled (or cache-hit) program.
+
+    Raises
+    ------
+    ValueError
+        Coefficients are not type-I (even tap count / asymmetric), or
+        the §2.1 int32 accumulator bound fails at ``spec.sample_bits``.
+    TypeError
+        Coefficient dtype is neither float nor integer.
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.compiler import compile_bank
+    >>> bank = np.zeros((2, 15), np.int64)
+    >>> bank[:, 7] = [64, 96]                    # centre-tap scalers
+    >>> prog = compile_bank(bank)
+    >>> prog.n_filters, prog.taps
+    (2, 15)
+    >>> compile_bank(bank) is prog               # content-addressed
+    True
     """
     spec = spec or CompileSpec()
     coeffs = np.atleast_2d(np.asarray(coeffs))

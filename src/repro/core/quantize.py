@@ -80,7 +80,7 @@ def po2_quantize_batch(
 # CSD-P plane quantization: keep only the P most-significant pulses of each
 # weight.  This is the paper's "naturally variable precision" observation
 # (§2) used as a *quantizer*: storage is P × 2-bit planes instead of 16 bits,
-# which is what the memory-bound decode roofline wants (EXPERIMENTS §Perf).
+# which is what a memory-bound decode roofline wants.
 # ---------------------------------------------------------------------------
 
 

@@ -82,6 +82,35 @@ class FilterBankEngine:
     chunk_hint : int
         Expected samples per push, the autotuner's amortization knob
         (streaming chunks are short; batch jobs long).
+    compiled : bool | str
+        Opt the ``"auto"`` sweep into the compiled execution lanes
+        (``True`` = this host's `default_lane`, or a lane name);
+        the engine then executes whatever lane the winning plan names.
+        Default ``False`` keeps the historic interpret-only behaviour.
+    lane : str | None
+        Pin the execution lane for a forced (non-auto) packed mode —
+        e.g. ``"xla"`` runs the schedule through the fused compiled
+        lowering.  ``None`` = the legacy pallas_call + ``interpret``.
+
+    Raises
+    ------
+    ValueError
+        Unknown ``mode``, ``channels < 1``, or non-type-I/overflowing
+        coefficients (via `compile_bank`'s §2.1 bound check).
+
+    Examples
+    --------
+    >>> import numpy as np
+    >>> from repro.filters import FilterBankEngine
+    >>> bank = np.zeros((4, 15), np.int64)
+    >>> bank[:, 7] = [64, 96, 160, 224]          # centre-tap scalers
+    >>> eng = FilterBankEngine(bank, channels=1, interpret=True)
+    >>> x = np.arange(40, dtype=np.int32)[None, :]
+    >>> y = eng.push(x)                          # (B, C, n_out)
+    >>> y.shape
+    (4, 1, 26)
+    >>> bool((y[1] == 96 * np.arange(7, 33)).all())
+    True
     """
 
     def __init__(
@@ -94,6 +123,8 @@ class FilterBankEngine:
         interpret: bool | None = None,
         merge: int | None = None,
         chunk_hint: int = 2048,
+        compiled: "bool | str" = False,
+        lane: str | None = None,
     ):
         from ..compiler import BlmacProgram, MERGE_DEFAULT, compile_bank
         from ..kernels.runtime import autotune_bank_dispatch
@@ -123,17 +154,21 @@ class FilterBankEngine:
         self.channels = int(channels)
         self.interpret = interpret
         self.dispatch_plan = None
+        self.lane = lane
         schedule = None
         if mode == "auto":
             self.dispatch_plan, schedule = autotune_bank_dispatch(
                 program, channels=self.channels, tile=tile,
                 chunk_hint=chunk_hint, interpret=interpret,
+                compiled=compiled,
             )
             mode = (
                 "specialized"
                 if self.dispatch_plan.mode == "specialized"
                 else "packed"
             )
+            if self.lane is None and self.dispatch_plan.lane != "interpret":
+                self.lane = self.dispatch_plan.lane
             if tile is None:
                 tile = self.dispatch_plan.tile
             if bank_tile is None and schedule is not None:
@@ -318,6 +353,7 @@ class FilterBankEngine:
                 self.tile,
                 resolve_interpret(self.interpret),
                 device_groups=self._group_ops,
+                lane=self.lane,
             )  # (B, C, n_tiles * tile), caller order restored
             return np.asarray(y[:, :, :n_out])
         out = np.empty((self.n_filters, self.channels, n_out), np.int32)

@@ -196,9 +196,11 @@ class ShardedFilterBankEngine:
         Force how the data axis is used; ``None`` lets the autotuner
         pick — including leaving the axis idle when the halo/split
         overhead loses to a single device per shard.
-    tile, merge, chunk_hint, interpret
+    tile, merge, chunk_hint, interpret, compiled
         As `repro.filters.FilterBankEngine`; per-shard tiles/modes are
-        autotuned per shard unless ``tile`` pins them.
+        autotuned per shard unless ``tile`` pins them.  ``compiled``
+        opts every per-shard sweep into the compiled execution lanes;
+        each shard then runs the lane its winning plan names.
     fault_injector : repro.distributed.faultbank.FaultInjector | None
         Deterministic chaos hooks (tests/benchmarks only): consulted on
         every shard dispatch and materialize.
@@ -225,6 +227,7 @@ class ShardedFilterBankEngine:
         merge: int | None = None,
         chunk_hint: int = 2048,
         interpret: bool | None = None,
+        compiled: "bool | str" = False,
         fault_injector=None,
         shard_timeout: float | None = None,
         integrity_check: bool = False,
@@ -262,6 +265,7 @@ class ShardedFilterBankEngine:
         self._merge_arg = merge
         self._chunk_hint = chunk_hint
         self._interpret_arg = interpret
+        self._compiled_arg = compiled
         self.injector = fault_injector
         self.shard_timeout = shard_timeout
         self.integrity_check = bool(integrity_check)
@@ -299,6 +303,7 @@ class ShardedFilterBankEngine:
             tile=self._tile_arg, chunk_hint=self._chunk_hint,
             interpret=self._interpret_arg,
             force_shards=force, force_data=self._force_data,
+            compiled=self._compiled_arg,
         )
         if self._merge_arg is not None:
             # re-plan only the scheduled shards whose merge differs,
@@ -370,7 +375,7 @@ class ShardedFilterBankEngine:
         plain = FilterBankEngine(
             self.program, channels=self.channels, tile=self._tile_arg,
             merge=self._merge_arg, chunk_hint=self._chunk_hint,
-            interpret=self._interpret_arg,
+            interpret=self._interpret_arg, compiled=self._compiled_arg,
         )
         self._plain = plain
         plan1 = plain.dispatch_plan
@@ -430,7 +435,7 @@ class ShardedFilterBankEngine:
 
             return run_specialized, 0
 
-        fn = self._make_scheduled_fn(schedule, plan.tile)
+        fn = self._make_scheduled_fn(schedule, plan.tile, lane=plan.lane)
         if self.n_data == 1:
             dev = dev_row[0]
             ops = tuple(
@@ -486,17 +491,20 @@ class ShardedFilterBankEngine:
 
         return run_mapped, offset
 
-    def _make_scheduled_fn(self, schedule, tile):
+    def _make_scheduled_fn(self, schedule, tile, lane=None):
         """Jitted scheduled-bank program for one shard: frame, then the
         shared `bank_schedule_apply` group loop (zeros for empty groups,
         one `_bank_call` per tile group, shard-order restoration).  The
         schedule is static (closed over); jit caches per input shape ×
         device.  ``ops`` carries only the NON-empty groups' operands
         (shard_map in_specs must match real arrays), re-slotted to the
-        full per-group list here."""
+        full per-group list here.  ``lane`` is the shard plan's execution
+        lane ("interpret" → the legacy pallas_call + interpret flag)."""
         from ..kernels.blmac_fir import bank_schedule_apply, frame_signal_batch
 
         taps, interpret = self.taps, self.interpret
+        if lane == "interpret":
+            lane = None  # legacy path: honour the interpret flag
         has_layers = [bool(g.sel_layers) for g in schedule.groups]
 
         @jax.jit
@@ -505,7 +513,8 @@ class ShardedFilterBankEngine:
             it = iter(ops)
             full = [next(it) if h else None for h in has_layers]
             return bank_schedule_apply(
-                frames, schedule, taps, tile, interpret, device_groups=full
+                frames, schedule, taps, tile, interpret,
+                device_groups=full, lane=lane,
             )
 
         return fn

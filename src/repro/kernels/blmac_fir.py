@@ -306,6 +306,141 @@ def _bank_call(
     )(frames, packed)
 
 
+# ---------------------------------------------------------------------------
+# compiled lowering lanes
+# ---------------------------------------------------------------------------
+#
+# The scheduled kernel above runs on four execution lanes:
+#
+#   "interpret" — the Pallas interpreter (pure python; the historic CI
+#       target every BENCH_fir number was recorded on),
+#   "mosaic"    — pallas_call compiled for TPU,
+#   "triton"    — pallas_call compiled for GPU,
+#   "xla"       — the SAME superlayer schedule lowered as a plain jitted
+#       XLA program (no Pallas): the always-available compiled CI target,
+#       since the Pallas interpreter is the only Pallas mode a CPU host
+#       can run.
+#
+# The XLA lane keeps the two properties that make the Pallas kernel fast:
+# the packed trit words are the *operand* (the 2-bit→{-1,0,+1} decode
+# happens inside the jitted program, so XLA fuses it into the dot's LHS
+# and trits never round-trip through memory as unpacked int8), and each
+# populated superlayer is ONE integer contraction — here against the
+# window matrix of EVERY (channel, signal-tile) grid cell at once,
+# ``(B_pad, M) @ (M, C·n_tiles·tile)``, which is exactly the
+# wide-matmul-unit regime where the compiled autotuner sweep
+# re-evaluates the merge heuristic: superlayers whose digit bound stays
+# below the f32 mantissa limit run bit-exactly on the float GEMM units
+# (`f32_dot_safe`), which caps the winning merge near the f32-safe span
+# instead of "fuse everything".
+# The cost is materializing that im2col-style window matrix
+# (``m_pad × signal`` int32, ~`m_pad`× the signal bytes) instead of one
+# (M, tile) block per grid step — the right trade below VMEM-scale
+# signals, and the reason the Pallas lanes keep the blocked layout.
+
+LANES = ("interpret", "mosaic", "triton", "xla")
+
+# float32 mantissa: integers of magnitude < 2**24 are exactly
+# representable, and sums/products that stay under the bound are exact
+F32_EXACT_BOUND = 1 << 24
+
+
+def f32_dot_safe(m_pad: int, parts) -> bool:
+    """Whether one superlayer's contraction is EXACT in float32.
+
+    Under the §2.1 regime every int32 path already assumes (8-bit
+    samples — the same precondition the pack-time accumulator bound is
+    stated for), the symmetric-fold window entries obey ``|u_j| <= 2**8``
+    and the superlayer digit is bounded by its trit shifts,
+    ``|d_j| <= sum(2**rel)``.  When ``m_pad * bound(d) * 2**8 < 2**24``
+    every partial sum of the dot is an integer below the f32 mantissa
+    limit, so running it on the float GEMM units is bit-exact — and on
+    CPU XLA those units are ~an order of magnitude faster than the int32
+    matmul loop (the wide-matmul-unit effect the compiled merge
+    heuristic re-evaluates; see `repro.core.costmodel`).
+    """
+    bound = sum(1 << rel for _, rel in parts)
+    return m_pad * bound * 256 <= F32_EXACT_BOUND
+
+
+def _lane_interpret(lane: str, interpret: bool) -> bool:
+    """Pallas ``interpret`` flag for a lane (the "xla" lane never reaches
+    a pallas_call)."""
+    if lane == "interpret":
+        return True
+    if lane in ("mosaic", "triton", "xla"):
+        return False
+    raise ValueError(f"unknown lane {lane!r}; expected one of {LANES}")
+
+
+@functools.partial(
+    jax.jit, static_argnames=("taps", "schedule", "tail_shift", "tile")
+)
+def _bank_call_xla(
+    frames: jnp.ndarray,  # (C, n_tiles, frame_len) int32
+    packed: jnp.ndarray,  # (B_pad, n_sel, n_words) int32, selected layers
+    taps: int,
+    schedule: tuple,
+    tail_shift: int,
+    tile: int,
+) -> jnp.ndarray:
+    """The scheduled bank computation as ONE fused XLA program — same
+    schedule semantics as `_fir_kernel_bank`, same (B_pad, C, n_tiles,
+    tile) result, bit-exact."""
+    n_chan, n_tiles, frame_len = frames.shape
+    b_pad, n_sel, n_words = packed.shape
+    m_pad = n_words * TRITS_PER_WORD
+    half = taps // 2
+    # window matrix for EVERY grid cell at once: row j of cell (c, s)
+    # holds the symmetric fold u_j[t] = x[t+j] + x[t+taps-1-j]
+    j = jnp.arange(m_pad, dtype=jnp.int32)[:, None]
+    t = jnp.arange(tile, dtype=jnp.int32)[None, :]
+    fwd = frames[..., jnp.minimum(j + t, frame_len - 1)]
+    rev = frames[..., jnp.clip(taps - 1 - j + t, 0, frame_len - 1)]
+    u = jnp.where(j < half, fwd + rev, jnp.where(j == half, fwd, 0))
+    # (C, n_tiles, m_pad, tile) → (m_pad, C·n_tiles·tile): the RHS every
+    # superlayer contraction shares
+    u = jnp.moveaxis(u, 2, 0).reshape(m_pad, n_chan * n_tiles * tile)
+
+    shifts = 2 * jnp.arange(TRITS_PER_WORD, dtype=jnp.int32)
+
+    def trit_layer(sel_idx):
+        # fused unpack: packed words are the operand; the 2-bit decode is
+        # part of the jitted program, feeding the dot LHS directly
+        codes = (packed[:, sel_idx, :, None] >> shifts) & 3
+        d = (codes == 1).astype(jnp.int32) - (codes == 3).astype(jnp.int32)
+        return d.reshape(b_pad, m_pad)
+
+    # superlayers whose digit bound admits the exact-f32 contraction run
+    # on the float GEMM units (see `f32_dot_safe`); the window matrix is
+    # converted once (|u_j| <= 2**8: exact)
+    u_f32 = (
+        u.astype(jnp.float32)
+        if any(f32_dot_safe(m_pad, parts) for _, parts in schedule)
+        else None
+    )
+    acc = jnp.zeros((b_pad, u.shape[1]), jnp.int32)
+    for shift_in, parts in schedule:  # MSB → LSB over populated superlayers
+        if shift_in:
+            acc = acc << shift_in
+        d = None
+        for sel_idx, rel in parts:
+            dl = trit_layer(sel_idx)
+            if rel:
+                dl = dl << rel
+            d = dl if d is None else d + dl
+        if f32_dot_safe(m_pad, parts):
+            # every partial sum is an integer < 2**24: the f32 dot is
+            # bit-exact, and the f32->s32 convert of exact integers is too
+            y = jnp.dot(d.astype(jnp.float32), u_f32).astype(jnp.int32)
+        else:
+            y = jnp.dot(d, u, preferred_element_type=jnp.int32)
+        acc = acc + y
+    if tail_shift:
+        acc = acc << tail_shift
+    return acc.reshape(b_pad, n_chan, n_tiles, tile)
+
+
 def pulses_from_packed(packed_row: np.ndarray, taps: int):
     """(n_layers, n_words) packed trits → MSB-first static pulse tuple
     (the `specialized_program` input) — the small-bank fast path's bridge
@@ -332,6 +467,7 @@ def blmac_fir_bank(
     merge: int = MERGE_DEFAULT,
     schedule: BankSchedule | None = None,
     fast_path: bool = True,
+    lane: str | None = None,
 ) -> jnp.ndarray:
     """Apply a B-filter bank to a C-channel signal with the scheduled
     bank kernel (one `pallas_call` per occupancy tile group).
@@ -346,7 +482,9 @@ def blmac_fir_bank(
     baseline in PR 1 purely in framing/padding overhead; now it costs
     exactly its pulse count.  Pass a precomputed ``schedule`` (from
     `plan_bank_schedule`) to skip planning on the hot path — the
-    `FilterBankEngine` does this once at construction.
+    `FilterBankEngine` does this once at construction.  ``lane``
+    selects the execution lane (see `LANES`; compiled lanes skip the
+    fast path — specialized programs are an interpret-era optimization).
     """
     x = jnp.asarray(x)
     squeeze = x.ndim == 1
@@ -356,7 +494,12 @@ def blmac_fir_bank(
     n_filters = packed.shape[0]
     interpret = resolve_interpret(interpret)
 
-    if fast_path and schedule is None and n_filters <= FAST_PATH_MAX:
+    if (
+        fast_path
+        and schedule is None
+        and n_filters <= FAST_PATH_MAX
+        and lane in (None, "interpret")
+    ):
         xi = x.astype(jnp.int32)
         n_out = xi.shape[-1] - taps + 1
         ys = [
@@ -377,9 +520,10 @@ def blmac_fir_bank(
     if schedule is None:
         schedule = plan_bank_schedule(packed, bank_tile, merge)
     frames, n_out = frame_signal_batch(x.astype(jnp.int32), taps, tile)
-    y = bank_schedule_apply(frames, schedule, taps, tile, interpret)
-    y = y[:, :, :n_out]
-    return y[:, 0, :] if squeeze else y
+    y = bank_schedule_apply(frames, schedule, taps, tile, interpret, lane=lane)
+    # one combined slice: separate [:, :, :n_out] then [:, 0, :] would copy
+    # the full (B, C, signal) buffer twice on the host
+    return y[:, 0, :n_out] if squeeze else y[:, :, :n_out]
 
 
 def bank_schedule_apply(
@@ -389,14 +533,40 @@ def bank_schedule_apply(
     tile: int,
     interpret: bool,
     device_groups: list | None = None,
+    lane: str | None = None,
 ) -> jnp.ndarray:
     """Run every tile group of a `BankSchedule` over pre-framed signal and
     reassemble rows in the caller's filter order → (B, C, n_tiles*tile).
 
     ``device_groups`` optionally supplies pre-uploaded packed operands
     (one per group, int32 view) so streaming callers don't re-stage the
-    bank every chunk."""
+    bank every chunk.  ``lane`` selects the execution lane (see `LANES`);
+    None keeps the legacy behaviour — a pallas_call honouring the
+    ``interpret`` flag — while ``"xla"`` routes to the fused compiled
+    lowering `_bank_call_xla` (bit-exact against every other lane)."""
     n_chan, n_tiles, _ = frames.shape
+    if lane is not None and lane != "xla":
+        interpret = _lane_interpret(lane, interpret)
+    if len(schedule.groups) == 1 and lane == "xla":
+        # Single tile group (the common autotuned shape): fold the
+        # caller-order restore into the dot's LHS instead of gathering
+        # the (B, C, signal) result — permuting the tiny packed operand's
+        # rows permutes the output rows for free, where `y[inv]` is a
+        # full-output-size copy (~6 ms of the ~40 ms xla arm at the
+        # BENCH_compiled geometry).  Pad rows drop out with the same
+        # indexing.  Pallas lanes keep the gather: their grid needs the
+        # padded, occupancy-sorted row layout.
+        g = schedule.groups[0]
+        if not g.sel_layers:
+            return jnp.zeros((len(schedule.inv), n_chan, n_tiles * tile),
+                             jnp.int32)
+        op = (
+            device_groups[0]
+            if device_groups is not None
+            else jnp.asarray(g.packed.view(np.int32))
+        )[schedule.inv]
+        y = _bank_call_xla(frames, op, taps, g.schedule, g.tail_shift, tile)
+        return y.reshape(y.shape[0], n_chan, -1)
     parts = []
     for gi, g in enumerate(schedule.groups):
         rows = g.packed.shape[0]
@@ -410,10 +580,15 @@ def bank_schedule_apply(
             if device_groups is not None
             else jnp.asarray(g.packed.view(np.int32))
         )
-        y = _bank_call(
-            frames, op, taps, g.schedule, g.tail_shift, tile,
-            schedule.tile_size, interpret,
-        )  # (rows, C, n_tiles, tile)
+        if lane == "xla":
+            y = _bank_call_xla(
+                frames, op, taps, g.schedule, g.tail_shift, tile
+            )
+        else:
+            y = _bank_call(
+                frames, op, taps, g.schedule, g.tail_shift, tile,
+                schedule.tile_size, interpret,
+            )  # (rows, C, n_tiles, tile)
         parts.append(y.reshape(rows, n_chan, -1))
     y = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
     return y[schedule.inv]  # drop pad rows, restore caller's filter order

@@ -35,10 +35,13 @@ from ..compiler.cache import STATS as _COMPILER_STATS
 __all__ = [
     "default_interpret",
     "resolve_interpret",
+    "default_lane",
+    "resolve_lane",
     "autotune_bank_dispatch",
     "autotune_sharded_dispatch",
     "SPECIALIZE_BANK_MAX",
     "MERGE_CANDIDATES",
+    "COMPILED_MERGE_CANDIDATES",
 ]
 
 # Specialized programs compile once per filter (~0.3 s each under the
@@ -46,12 +49,22 @@ __all__ = [
 # the steady-state model says, so the compile bill stays bounded.
 SPECIALIZE_BANK_MAX = 32
 MERGE_CANDIDATES = (1, 4, 8)
+# Compiled lanes re-open the merge question: a superlayer matmul on a
+# wide vector/matrix unit amortizes its pass over the window matrix far
+# better than the interpreter did, so FEWER, FATTER superlayers win —
+# 32 exceeds any 16-bit bank's layer count, i.e. full fusion into one
+# dense (bank_tile, M) @ (M, signal) contraction.  Measured on the
+# reference container (B=256, taps=63): full merge on the XLA lane is
+# ~2× merge=8 on the same lane, inverting the interpret-era heuristic.
+COMPILED_MERGE_CANDIDATES = (8, 16, 32)
 DEFAULT_TILE = 512
 # Tile is a measured lookup, not a model output: the analytic cost model
 # is linear in tile and cannot capture the cache-residency cliff that
 # actually decides it (a (bank_tile, tile) int32 accumulator past ~256 KiB
 # goes memory-bound on the reference machine).  Measured optimum: 512
-# everywhere except wide scheduled tiles, where 256 wins ~15%.
+# everywhere except wide scheduled tiles, where 256 wins ~15%.  The
+# cliff is a property of the interpreter's blocked accumulate; compiled
+# lanes keep DEFAULT_TILE.
 WIDE_BANK_TILE = 128
 
 
@@ -68,6 +81,30 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """Resolve an ``interpret=None`` kernel argument to the backend default."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def default_lane() -> str:
+    """The compiled execution lane this host can actually run: Mosaic on
+    a TPU backend, Triton on a GPU backend, the plain-XLA lowering
+    everywhere else (the CPU-compiled CI target)."""
+    backend = jax.default_backend()
+    if backend == "tpu":
+        return "mosaic"
+    if backend == "gpu":
+        return "triton"
+    return "xla"
+
+
+def resolve_lane(lane: "str | bool | None") -> str:
+    """Resolve a ``compiled=`` argument to a lane name: ``True``/``None``
+    → this host's `default_lane`, a string → itself (validated)."""
+    from .blmac_fir import LANES
+
+    if lane is None or lane is True:
+        return default_lane()
+    if lane in LANES:
+        return str(lane)
+    raise ValueError(f"unknown lane {lane!r}; expected one of {LANES}")
 
 
 def _resolve_program(bank, taps):
@@ -90,6 +127,7 @@ def autotune_bank_dispatch(
     tile: int | None = None,
     chunk_hint: int = 2048,
     interpret: bool | None = None,
+    compiled: "bool | str" = False,
 ):
     """Pick ``(mode, tile, bank_tile, merge)`` for a compiled bank.
 
@@ -109,17 +147,30 @@ def autotune_bank_dispatch(
     small chunks → dispatch overhead matters more; one-shot batch jobs
     amortize it).  ``tile`` defaults to the measured per-mode lookup
     (see `_default_tile`).
+
+    ``compiled`` opts the sweep into the compiled execution lanes:
+    ``True`` adds this host's `default_lane` (a lane name string pins
+    one explicitly), costed at the wider `COMPILED_MERGE_CANDIDATES`
+    with that lane's `BackendCalibration` — fitted at first use via
+    `repro.core.costmodel.ensure_calibration`.  The interpret candidates
+    stay in the sweep, so the winning ``plan.lane`` answers "does the
+    compiled lowering pay here?".  The default (``False``) keeps the
+    historic interpret-only sweep byte-for-byte.
     """
     program = _resolve_program(bank, taps)
+    lanes: "tuple[str, ...]" = ("interpret",)
+    if compiled:
+        lanes = ("interpret", resolve_lane(compiled))
     key = (
         program.key, channels, tile, chunk_hint, resolve_interpret(interpret),
+        lanes,
     )
     if key in _AUTOTUNE_CACHE:
         _AUTOTUNE_CACHE.move_to_end(key)
         _COMPILER_STATS["autotune"].hit()
         return _AUTOTUNE_CACHE[key]
     _COMPILER_STATS["autotune"].miss()
-    result = _autotune(program, channels, tile, chunk_hint)
+    result = _autotune(program, channels, tile, chunk_hint, lanes=lanes)
     _AUTOTUNE_CACHE[key] = result
     while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
         _AUTOTUNE_CACHE.popitem(last=False)
@@ -130,9 +181,10 @@ _AUTOTUNE_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _AUTOTUNE_CACHE_MAX = 16  # schedules hold compacted bank copies: keep few
 
 
-def _autotune(program, channels, tile, chunk_hint, allow_specialized=True):
+def _autotune(program, channels, tile, chunk_hint, allow_specialized=True,
+              lanes=("interpret",)):
     from ..compiler import default_bank_tile
-    from ..core.costmodel import BankDispatchPlan
+    from ..core.costmodel import BankDispatchPlan, ensure_calibration
 
     n_filters = program.n_filters
 
@@ -147,16 +199,26 @@ def _autotune(program, channels, tile, chunk_hint, allow_specialized=True):
     bank_tiles = {default_bank_tile(n_filters)}
     if n_filters > 8:
         bank_tiles.add(min(default_bank_tile(n_filters), 32))
-    for bt in sorted(bank_tiles):
-        for merge in MERGE_CANDIDATES:
-            schedule = program.schedule(bt, merge)
-            t = tile or _default_tile("scheduled", bt)
-            us = program.predict_scheduled_us(
-                channels, n_tiles(t), t, bt, merge
-            )
-            plan = BankDispatchPlan("scheduled", t, bt, merge, us)
-            if best is None or us < best[0].predicted_us:
-                best = (plan, schedule)
+    for lane in lanes:
+        if lane == "interpret":
+            # the historic sweep: reference constants, blocked-tile lookup
+            cal, merges = None, MERGE_CANDIDATES
+        else:
+            cal = ensure_calibration(lane)  # fit-at-first-use, persisted
+            merges = COMPILED_MERGE_CANDIDATES
+        for bt in sorted(bank_tiles):
+            for merge in merges:
+                schedule = program.schedule(bt, merge)
+                t = tile or (
+                    _default_tile("scheduled", bt)
+                    if lane == "interpret" else DEFAULT_TILE
+                )
+                us = program.predict_scheduled_us(
+                    channels, n_tiles(t), t, bt, merge, cal=cal
+                )
+                plan = BankDispatchPlan("scheduled", t, bt, merge, us, lane)
+                if best is None or us < best[0].predicted_us:
+                    best = (plan, schedule)
     return best
 
 
@@ -175,6 +237,7 @@ def autotune_sharded_dispatch(
     interpret: bool | None = None,
     force_shards: int | None = None,
     force_data: str | None = None,
+    compiled: "bool | str" = False,
 ):
     """Plan a bank dispatch over an (n_bank, n_data) device mesh.
 
@@ -200,13 +263,20 @@ def autotune_sharded_dispatch(
     (the sweep collapses to that single candidate — mode/tile per shard
     are still autotuned); ``force_data`` pins the data-axis usage to
     ``"none"``, ``"channels"`` or ``"time"`` instead of letting the
-    sweep decline the axis.
+    sweep decline the axis.  ``compiled`` adds the compiled execution
+    lanes to every per-shard sweep, exactly as in
+    `autotune_bank_dispatch` — per-shard plans then carry the winning
+    ``lane`` and the host-dispatch costs are priced with that lane's
+    calibration.
     """
     program = _resolve_program(bank, taps)
     n_bank, n_data = int(mesh_shape[0]), int(mesh_shape[1])
+    lanes: "tuple[str, ...]" = ("interpret",)
+    if compiled:
+        lanes = ("interpret", resolve_lane(compiled))
     key = (
         "sharded", program.key, channels, n_bank, n_data, tile, chunk_hint,
-        resolve_interpret(interpret), force_shards, force_data,
+        resolve_interpret(interpret), force_shards, force_data, lanes,
     )
     if key in _AUTOTUNE_CACHE:
         _AUTOTUNE_CACHE.move_to_end(key)
@@ -215,7 +285,7 @@ def autotune_sharded_dispatch(
     _COMPILER_STATS["autotune"].miss()
     result = _autotune_sharded(
         program, channels, n_bank, n_data, tile, chunk_hint,
-        force_shards, force_data,
+        force_shards, force_data, lanes=lanes,
     )
     _AUTOTUNE_CACHE[key] = result
     while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
@@ -236,9 +306,11 @@ def _shard_candidates(n_bank: int, n_filters: int) -> "list[int]":
 
 
 def _autotune_sharded(program, channels, n_bank, n_data, tile,
-                      chunk_hint, force_shards=None, force_data=None):
+                      chunk_hint, force_shards=None, force_data=None,
+                      lanes=("interpret",)):
     from ..core.costmodel import (PALLAS_CALL_US, SPEC_CALL_US,
-                                  ShardedBankPlan, predict_sharded_us)
+                                  ShardedBankPlan, get_calibration,
+                                  predict_sharded_us)
 
     taps = program.taps
     n_filters = program.n_filters
@@ -288,17 +360,24 @@ def _autotune_sharded(program, channels, n_bank, n_data, tile,
                     sub = program.select(rows)  # memoized shard subprogram
                     plan, schedule = _autotune(
                         sub, chan_local, tile, chunk_local,
-                        allow_specialized=allow_spec,
+                        allow_specialized=allow_spec, lanes=lanes,
                     )
                     plans.append(plan)
                     schedules.append(schedule)
                     costs.append(plan.predicted_us)
+                    # host dispatch is priced with the winning lane's
+                    # constants (interpret keeps the reference values)
+                    if plan.lane == "interpret":
+                        call_us, spec_us = PALLAS_CALL_US, SPEC_CALL_US
+                    else:
+                        c = get_calibration(plan.lane)
+                        call_us, spec_us = c.call_us, c.spec_call_us
                     if plan.mode == "specialized":
-                        host.append(len(rows) * chan_local * SPEC_CALL_US)
+                        host.append(len(rows) * chan_local * spec_us)
                     else:
                         host.append(
                             sum(1 for g in schedule.groups if g.sel_layers)
-                            * PALLAS_CALL_US
+                            * call_us
                         )
                 if allow_spec and not any(
                     p.mode == "specialized" for p in plans
