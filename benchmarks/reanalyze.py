@@ -10,6 +10,11 @@ Two sections:
   `best_arm`) from the stored raw values — HLO FLOP/byte counts and
   measured peaks — so a formula change does not require re-timing the
   arms on the reference box.
+* **cse** — re-derive `BENCH_cse.json`'s reduction and ratio columns
+  (`adds_per_filter_*`, `adds_reduction`, `pulse_reduction`,
+  `cycle_reduction`, `throughput_ratio`, `forced_ratio`) from the
+  stored raw totals and per-arm seconds (same formulas as
+  `bank_cse.derive_sweep` / `derive_throughput`).
 """
 import glob
 import gzip
@@ -25,6 +30,7 @@ OUT = os.path.join(os.path.dirname(__file__), "out", "dryrun")
 BENCH_COMPILED = os.path.join(
     os.path.dirname(__file__), "..", "BENCH_compiled.json"
 )
+BENCH_CSE = os.path.join(os.path.dirname(__file__), "..", "BENCH_cse.json")
 
 
 def reanalyze_dryrun() -> None:
@@ -92,6 +98,38 @@ def reanalyze_compiled(path: str = BENCH_COMPILED) -> None:
           f"best={r['best_arm']} {r['compiled_speedup']:.2f}x")
 
 
+def reanalyze_cse(path: str = BENCH_CSE) -> None:
+    """Recompute BENCH_cse.json's derived reduction/ratio columns from
+    its stored raw totals (same formulas as bank_cse.run)."""
+    if not os.path.exists(path):
+        return
+    from benchmarks.bank_cse import derive_sweep, derive_throughput
+
+    r = json.load(open(path))
+    s = r["sweep"]
+    s.update(derive_sweep(
+        s["total_adds_parent"], s["total_adds_optimized"], s["n_filters"],
+        s["total_pulses_parent"], s["total_pulses_optimized"],
+        s["mean_cycles_parent"], s["mean_cycles_optimized"],
+    ))
+    tp = r["throughput"]
+    for row in tp["rows"]:
+        row["samples_per_s_per_filter"] = (
+            (tp["n_samples"] - tp["taps"] + 1) / row["seconds"]
+        )
+        row["ratio_vs_baseline"] = (
+            tp["rows"][0]["seconds"] / row["seconds"]
+        )
+    tp.update(derive_throughput(tp["rows"]))
+    with open(path, "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print(os.path.basename(path), "->",
+          f"adds_reduction={100 * s['adds_reduction']:.1f}% "
+          f"throughput_ratio={tp['throughput_ratio']:.2f}x")
+
+
 if __name__ == "__main__":
     reanalyze_dryrun()
     reanalyze_compiled()
+    reanalyze_cse()

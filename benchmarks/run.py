@@ -117,6 +117,24 @@ def bench_bank_compiled() -> None:
     _row("bank_compiled", best["seconds"] * 1e6, derived)
 
 
+def bench_bank_cse() -> None:
+    """Cross-filter CSE pass: adds-per-filter reduction on the sweep
+    grid + autotuned B=256 throughput vs the unoptimized baseline
+    (full grid + BENCH_cse.json: benchmarks/bank_cse.py)."""
+    from benchmarks import bank_cse
+
+    result = bank_cse.run(n_div=10, n_samples=4096, repeats=2,
+                          verbose=False)
+    sweep, tp = result["sweep"], result["throughput"]
+    auto = next(r for r in tp["rows"] if r["arm"] == "cse-auto")
+    derived = (f"adds_reduction={100 * sweep['adds_reduction']:.1f}%;"
+               f"cycle_reduction={100 * sweep['cycle_reduction']:.1f}%;"
+               f"n_shared={sweep['n_shared']};"
+               f"auto={tp['auto_cse'] or 'n/a'};"
+               f"throughput_ratio={tp['throughput_ratio']:.2f}x")
+    _row("bank_cse", auto["seconds"] * 1e6, derived)
+
+
 def bench_kernel_pulse_matmul() -> None:
     """CSD-P pulse-code matmul vs quantization error / storage."""
     import jax.numpy as jnp
@@ -174,6 +192,7 @@ def main() -> None:
     bench_kernel_blmac_fir()
     bench_kernel_bank()
     bench_bank_compiled()
+    bench_bank_cse()
     bench_kernel_pulse_matmul()
     bench_roofline_summary()
 

@@ -24,6 +24,10 @@ Public surface:
   * `BlmacProgram` — the artifact (schedules, partitions, cycle and
     latency predictions all memoized on it),
   * `lower` — executables for the five backends,
+  * `cse_pass` / `OptimizedProgram` — the cross-filter CSE optimizing
+    pass: shared partial-sum rows mined across the bank, bit-exact on
+    every backend, memoized on ``(parent.key, "cse", level)`` (see
+    ``docs/architecture.md`` "Optimization passes"),
   * `plan_bank_schedule` / `BankSchedule` / `superlayer_schedule` — the
     pack-time scheduler (moved here from ``kernels/blmac_fir.py``),
   * `cache_stats` / `clear_caches` — one observability point for every
@@ -38,6 +42,7 @@ this package.
 """
 from .cache import cache_stats, clear_caches
 from .lowering import BACKENDS, Lowered, lower
+from .optimize import OptimizedProgram, cse_pass
 from .program import (BlmacProgram, CompileSpec, PROGRAM_FORMAT_VERSION,
                       ProgramFormatError, compile_bank, compile_packed,
                       pack_bank_trits)
@@ -53,6 +58,7 @@ __all__ = [
     "CompileSpec",
     "Lowered",
     "MERGE_DEFAULT",
+    "OptimizedProgram",
     "PROGRAM_FORMAT_VERSION",
     "ProgramFormatError",
     "STATE_FORMAT_VERSION",
@@ -63,6 +69,7 @@ __all__ = [
     "clear_caches",
     "compile_bank",
     "compile_packed",
+    "cse_pass",
     "default_bank_tile",
     "lower",
     "pack_bank_trits",

@@ -88,6 +88,9 @@ PROGRAM_CACHE = ProgramCache()
 # object stays in kernels/runtime.py to keep that module a leaf)
 STATS: "dict[str, CacheStat]" = {
     "autotune": CacheStat(),
+    # the optimized-program memo (compiler/optimize.py `_CSE_MEMO`):
+    # hits are cse_pass calls answered without re-mining
+    "cse": CacheStat(),
 }
 
 # event counters for the expensive derivations `compile_bank` is meant to
@@ -107,6 +110,7 @@ def cache_stats() -> dict:
         {
           "program":     {"hits": ..., "misses": ..., "size": ...},
           "autotune":    {"hits": ..., "misses": ..., "size": ...},
+          "cse":         {"hits": ..., "misses": ..., "size": ...},
           "specialized": {"hits": ..., "misses": ..., "size": ...},
           "bank_call":   {"size": ...},          # jit cache: size only
           "counters":    {"csd_packings": ..., "schedule_plans": ...,
@@ -120,6 +124,7 @@ def cache_stats() -> dict:
     # kernels package (`import ... as` would resolve the shadowing attr)
     _bf = importlib.import_module("repro.kernels.blmac_fir")
     _rt = importlib.import_module("repro.kernels.runtime")
+    _opt = importlib.import_module("repro.compiler.optimize")
 
     out: dict = {
         "program": {
@@ -131,6 +136,11 @@ def cache_stats() -> dict:
             "hits": STATS["autotune"].hits,
             "misses": STATS["autotune"].misses,
             "size": len(_rt._AUTOTUNE_CACHE),
+        },
+        "cse": {
+            "hits": STATS["cse"].hits,
+            "misses": STATS["cse"].misses,
+            "size": len(_opt._CSE_MEMO),
         },
     }
     info = _bf.specialized_program.cache_info()
@@ -155,10 +165,13 @@ def clear_caches() -> None:
     """
     _bf = importlib.import_module("repro.kernels.blmac_fir")
     _rt = importlib.import_module("repro.kernels.runtime")
+    _opt = importlib.import_module("repro.compiler.optimize")
 
     PROGRAM_CACHE.clear()
     _rt._AUTOTUNE_CACHE.clear()
     STATS["autotune"].reset()
+    _opt._CSE_MEMO.clear()
+    STATS["cse"].reset()
     _bf.specialized_program.cache_clear()
     try:
         _bf._bank_call.clear_cache()

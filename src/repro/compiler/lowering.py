@@ -26,6 +26,16 @@ is ``(C, T)`` or ``(T,)`` integer samples) for:
 
 All five agree bit-for-bit on integer inputs — `tests/differential.py`
 proves it on one shared program.
+
+`OptimizedProgram` (the CSE pass output, `repro.compiler.optimize`)
+lowers through the same five backends: the executables run the
+augmented shared-row bank and fold the shared partial sums back with
+the program's combine matrix, so ``exe(x)`` still returns
+``(out_filters, C, n_out)`` — bit-exact against lowering the parent.
+The oracle reads ``effective_qbank()`` (weight-level reconstruction),
+keeping it independent of the shared-row execution under test; the
+vmachine widens ``coeff_bits`` because reduced/virtual row magnitudes
+may exceed the parent's coefficient range.
 """
 from __future__ import annotations
 
@@ -36,6 +46,15 @@ from .program import BlmacProgram
 __all__ = ["BACKENDS", "Lowered", "lower"]
 
 BACKENDS = ("oracle", "specialized", "scheduled", "vmachine", "sharded")
+
+
+def _host_combine_i32(y: np.ndarray, combine: np.ndarray, n_real: int):
+    """int32 shared-row fold on the host: int64 intermediate, then a
+    wrapping cast — the same mod-2**32 residue as the in-kernel GEMM."""
+    mixed = y[:n_real].astype(np.int64) + np.tensordot(
+        combine, y[n_real:].astype(np.int64), axes=1
+    )
+    return mixed.astype(np.int32)
 
 
 class Lowered:
@@ -129,10 +148,14 @@ def lower(
     """
     if not isinstance(program, BlmacProgram):
         raise TypeError("lower() needs a BlmacProgram — call compile_bank")
+    combine = program.combine  # None on plain programs
+    n_real = program.out_filters if combine is not None else None
     if backend == "oracle":
         from ..filters.apply import fir_bit_layers_batch
 
-        qbank = program.qbank
+        qbank = (
+            program.qbank if combine is None else program.effective_qbank()
+        )
 
         def run_oracle(x):
             return fir_bit_layers_batch(_as_channels(x), qbank)
@@ -151,7 +174,7 @@ def lower(
         def run_specialized(x):
             xi = jnp.asarray(_as_channels(x), jnp.int32)
             n_out = xi.shape[-1] - taps + 1
-            return np.stack([
+            y = np.stack([
                 np.stack([
                     np.asarray(
                         blmac_fir_specialized(xi[c], p, taps, tile, interpret)
@@ -160,6 +183,9 @@ def lower(
                 ])
                 for p in pulses
             ])
+            if combine is not None:
+                y = _host_combine_i32(y, combine, n_real)
+            return y
 
         return Lowered(run_specialized, backend, program)
 
@@ -173,38 +199,58 @@ def lower(
             return np.asarray(blmac_fir_bank(
                 _as_channels(x), program.packed, program.taps, tile,
                 interpret=interpret, schedule=sched, fast_path=False,
-                lane=lane,
+                lane=lane, combine=combine, n_real=n_real,
             ))
 
         return Lowered(run_scheduled, backend, program, schedule=sched)
 
     if backend == "vmachine":
+        import dataclasses
+
         from ..core.machine import MachineSpec
         from ..core.vmachine import FirBlmacVMachine
 
         spec = machine_spec or MachineSpec(taps=program.taps)
+        if combine is not None:
+            # reduced/virtual row magnitudes can exceed the parent's
+            # coefficient range — widen, as machine_cycles() does
+            spec = dataclasses.replace(
+                spec, coeff_bits=max(spec.coeff_bits, program.n_layers + 1)
+            )
         vm = FirBlmacVMachine(spec)
         fits = vm.program_bank(program.qbank)
 
         def run_vmachine(x):
             x2 = _as_channels(x)
-            return np.stack(
+            y = np.stack(
                 [vm.run(x2[c]).outputs for c in range(x2.shape[0])], axis=1
             )
+            if combine is not None:
+                # the vmachine is exact int64: shared rows fold without
+                # wrap, landing on the parent's exact outputs
+                y = y[:n_real] + np.tensordot(combine, y[n_real:], axes=1)
+            return y
 
         return Lowered(run_vmachine, backend, program, vmachine=vm, fits=fits)
 
     if backend == "sharded":
         from ..filters.sharded import ShardedFilterBankEngine
 
+        # the sharded engine partitions rows across the bank mesh; an
+        # optimized program shards its augmented bank (shared rows are
+        # rows like any other) and folds after the gather
         eng = ShardedFilterBankEngine(
-            program, channels=channels, mesh=mesh, tile=tile, merge=merge,
+            program.bank if combine is not None else program,
+            channels=channels, mesh=mesh, tile=tile, merge=merge,
             interpret=interpret,
         )
 
         def run_sharded(x):
             eng.reset()
-            return eng.push(_as_channels(x))
+            y = eng.push(_as_channels(x))
+            if combine is not None:
+                y = _host_combine_i32(np.asarray(y), combine, n_real)
+            return y
 
         return Lowered(run_sharded, backend, program, engine=eng)
 

@@ -177,6 +177,12 @@ class BlmacProgram:
         Non-zero trits per filter — the §3.3 add count less the folds.
     """
 
+    # non-None only on `repro.compiler.optimize.OptimizedProgram`; plain
+    # consumers can branch on `program.combine is not None` (or on
+    # `parent`) without importing the optimize module
+    combine = None
+    parent = None
+
     def __init__(self, *, qbank, exponents, packed, occupancy, signatures,
                  pulse_counts, spec: CompileSpec, key: str):
         self.qbank = qbank
@@ -212,6 +218,22 @@ class BlmacProgram:
     def mean_pulses(self) -> float:
         """Bank-average BLMAC pulses per filter (the cost model's knob)."""
         return float(self.pulse_counts.mean()) if self.n_filters else 0.0
+
+    @property
+    def out_filters(self) -> int:
+        """Filters this program serves — equals ``n_filters`` here;
+        an `OptimizedProgram` serves fewer than its row count (the
+        extra rows are shared partial sums)."""
+        return self.n_filters
+
+    def total_adds(self) -> int:
+        """§3.3 additions to produce one output sample of the whole
+        bank: ``taps//2`` symmetric folds per filter plus one add per
+        CSD pulse — the paper's adds-per-filter metric times B, and the
+        baseline the CSE pass (`repro.compiler.optimize`) reduces."""
+        return self.n_filters * (self.taps // 2) + int(
+            self.pulse_counts.sum()
+        )
 
     @property
     def filter_costs(self) -> np.ndarray:
@@ -564,6 +586,10 @@ class BlmacProgram:
                 qbank = np.ascontiguousarray(z["qbank"], np.int64)
                 exponents = np.ascontiguousarray(z["exponents"], np.int64)
                 packed = np.ascontiguousarray(z["packed"], np.uint32)
+                combine = use_counts = None
+                if "cse" in header:  # an optimized program (see optimize.py)
+                    combine = np.asarray(z["combine"], np.int64)
+                    use_counts = np.asarray(z["use_counts"], np.int64)
         except ProgramFormatError:
             raise
         except Exception as e:  # truncated zip, missing array, bad JSON …
@@ -571,7 +597,9 @@ class BlmacProgram:
         spec = CompileSpec(**header["spec"])
         taps = int(header["taps"])
         pkey = _packed_key(packed, taps, spec.sample_bits)
-        if pkey[1].hex() != header.get("key"):
+        # an optimized file's `key` is its CSE content address; the raw
+        # trit digest moves to `packed_digest` (same integrity check)
+        if pkey[1].hex() != header.get("packed_digest", header.get("key")):
             raise ProgramFormatError(
                 f"{path}: content digest mismatch (corrupted file?)"
             )
@@ -586,6 +614,12 @@ class BlmacProgram:
             raise ProgramFormatError(
                 f"{path}: stored coefficients do not decode from the packed "
                 f"trits — digest mismatch (corrupted file?)"
+            )
+        if "cse" in header:
+            from .optimize import _load_optimized
+
+            return _load_optimized(
+                path, header, qbank, exponents, packed, combine, use_counts
             )
         cached = PROGRAM_CACHE.get(pkey)
         if cached is not None:

@@ -34,8 +34,12 @@ MAX_BANK_TILE = 256  # acc VMEM at tile=1024: 256×1024×4 B = 1 MiB
 
 # CSD layers fused per superlayer matmul (see plan_bank_schedule): the
 # measured optimum on the reference machine; 1 recovers the paper-pure
-# one-matmul-per-bit-layer kernel, 7 keeps superlayer digits in int8
-# range for MXU operand packing.
+# one-matmul-per-bit-layer kernel.  8 merged layers bound the superlayer
+# digit by 2**8 - 1, which keeps the whole contraction inside the exact
+# float32 window (`repro.kernels.blmac_fir.f32_dot_safe`: m_pad * bound
+# * 2**8 <= 2**24, satisfied for folded windows up to ~257 taps-half) —
+# so the compiled lanes run it on the fast f32 GEMM units bit-exactly,
+# the effect the compiled-merge autotuner sweep re-measures per plan.
 MERGE_DEFAULT = 8
 
 

@@ -396,6 +396,11 @@ class BankDispatchPlan:
     merge: int
     predicted_us: float
     lane: str = "interpret"
+    # CSE verdict for plans tuned on an `OptimizedProgram`: "" (plain
+    # program), "optimized" (the shared-row layout won), or "declined"
+    # (the parent's own best plan was cheaper once the combine stage was
+    # priced in — the engine then executes the parent, bit-identically)
+    cse: str = ""
 
 
 def predict_specialized_us(
@@ -454,6 +459,28 @@ def predict_scheduled_us(
     return total
 
 
+def predict_combine_us(
+    n_real: int,
+    n_shared: int,
+    channels: int,
+    n_tiles: int,
+    tile: int,
+    cal: BackendCalibration | None = None,
+) -> float:
+    """Modelled latency of the CSE combine stage: one extra dispatch
+    applying the ``(n_real, n_shared)`` reuse matrix to the shared-row
+    outputs — a small GEMM plus the elementwise add back into the real
+    rows.  Priced at the lane's *int32* MAC rate even when the schedule
+    itself is f32-safe: combined outputs reach the full int32 range, so
+    the exact-f32 trick never applies to this contraction.  Zero when
+    the program has no shared rows."""
+    if n_shared == 0:
+        return 0.0
+    c = cal or REFERENCE_CALIBRATIONS["interpret"]
+    signal = channels * n_tiles * tile
+    return c.call_us + n_real * (n_shared + 1) * signal * c.mac_us
+
+
 # ---------------------------------------------------------------------------
 # mesh-aware sharded-bank cost model
 # ---------------------------------------------------------------------------
@@ -497,6 +524,9 @@ class ShardedBankPlan:
     data_mode: str
     shard_plans: tuple
     predicted_us: float
+    # CSE verdict when tuned on an `OptimizedProgram` — same convention
+    # as `BankDispatchPlan.cse` ("", "optimized", or "declined")
+    cse: str = ""
 
     @property
     def sharded(self) -> bool:

@@ -63,7 +63,11 @@ class FilterBankEngine:
         Quantized odd symmetric (type-I) coefficients, one row per filter
         — compiled via `compile_bank` (content-addressed, so repeated
         constructions of the same bank share one artifact).  Passing a
-        prebuilt / `load()`ed program skips compilation entirely.
+        prebuilt / `load()`ed program skips compilation entirely.  A
+        CSE-`OptimizedProgram` serves its PARENT's filters: the engine
+        runs the shared-row layout and folds the combine matrix inside
+        `_apply` (``mode="auto"`` lets the autotuner *decline* the
+        optimized layout — ``dispatch_plan.cse`` records the verdict).
     channels : int
         Number of independent input channels C (all filtered by every filter).
     tile : int | None
@@ -147,9 +151,6 @@ class FilterBankEngine:
             mode = "packed"
         if mode not in ("auto", "packed", "specialized"):
             raise ValueError(f"unknown mode {mode!r}")
-        self.program = program
-        self.qbank = program.qbank
-        self.n_filters = program.n_filters
         self.taps = program.taps
         self.channels = int(channels)
         self.interpret = interpret
@@ -162,6 +163,11 @@ class FilterBankEngine:
                 chunk_hint=chunk_hint, interpret=interpret,
                 compiled=compiled,
             )
+            if self.dispatch_plan.cse == "declined":
+                # a CSE-optimized program whose shared-row layout the
+                # cost model rejects here: the plan (and schedule) are
+                # the PARENT's — execute it, bit-identical outputs
+                program = program.parent
             mode = (
                 "specialized"
                 if self.dispatch_plan.mode == "specialized"
@@ -175,6 +181,16 @@ class FilterBankEngine:
                 bank_tile = schedule.tile_size
             if merge is None and schedule is not None:
                 merge = schedule.merge
+        self.program = program
+        # external face: a CSE-optimized program still SERVES the
+        # parent's filters — qbank/n_filters describe the combined
+        # outputs, the augmented shared-row layout stays internal
+        self._combine = program.combine
+        self.qbank = (
+            program.qbank if program.combine is None
+            else program.effective_qbank()
+        )
+        self.n_filters = program.out_filters
         self.tile = int(tile) if tile is not None else DEFAULT_TILE
         self.mode = mode
         self.merge = merge if merge is not None else MERGE_DEFAULT
@@ -354,9 +370,11 @@ class FilterBankEngine:
                 resolve_interpret(self.interpret),
                 device_groups=self._group_ops,
                 lane=self.lane,
-            )  # (B, C, n_tiles * tile), caller order restored
+                combine=self._combine,
+                n_real=self.n_filters if self._combine is not None else None,
+            )  # (B, C, n_tiles * tile), caller order restored + combined
             return np.asarray(y[:, :, :n_out])
-        out = np.empty((self.n_filters, self.channels, n_out), np.int32)
+        out = np.empty((len(self._schedules), self.channels, n_out), np.int32)
         for b, pulses in enumerate(self._schedules):
             for c in range(self.channels):
                 out[b, c] = np.asarray(
@@ -364,4 +382,8 @@ class FilterBankEngine:
                         x[c], pulses, self.taps, self.tile, self.interpret
                     )
                 )[:n_out]
+        if self._combine is not None:
+            from ..compiler.lowering import _host_combine_i32
+
+            out = _host_combine_i32(out, self._combine, self.n_filters)
         return out

@@ -374,7 +374,8 @@ def _lane_interpret(lane: str, interpret: bool) -> bool:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("taps", "schedule", "tail_shift", "tile")
+    jax.jit,
+    static_argnames=("taps", "schedule", "tail_shift", "tile", "n_real"),
 )
 def _bank_call_xla(
     frames: jnp.ndarray,  # (C, n_tiles, frame_len) int32
@@ -383,10 +384,18 @@ def _bank_call_xla(
     schedule: tuple,
     tail_shift: int,
     tile: int,
+    combine: jnp.ndarray | None = None,  # (n_real, n_shared) int32
+    n_real: int | None = None,
 ) -> jnp.ndarray:
     """The scheduled bank computation as ONE fused XLA program — same
     schedule semantics as `_fir_kernel_bank`, same (B_pad, C, n_tiles,
-    tile) result, bit-exact."""
+    tile) result, bit-exact.
+
+    ``combine`` (CSE-optimized programs, `repro.compiler.optimize`) adds
+    a second small GEMM to the fused program: rows past ``n_real`` are
+    shared partial-sum rows, folded back as ``y[:n_real] + combine @
+    y[n_real:]`` — int32 ring arithmetic, so the result equals the
+    parent program's output bit-for-bit even if a shared row wraps."""
     n_chan, n_tiles, frame_len = frames.shape
     b_pad, n_sel, n_words = packed.shape
     m_pad = n_words * TRITS_PER_WORD
@@ -438,7 +447,11 @@ def _bank_call_xla(
         acc = acc + y
     if tail_shift:
         acc = acc << tail_shift
-    return acc.reshape(b_pad, n_chan, n_tiles, tile)
+    if combine is not None:
+        acc = acc[:n_real] + jnp.dot(
+            combine, acc[n_real:], preferred_element_type=jnp.int32
+        )
+    return acc.reshape(acc.shape[0], n_chan, n_tiles, tile)
 
 
 def pulses_from_packed(packed_row: np.ndarray, taps: int):
@@ -468,6 +481,8 @@ def blmac_fir_bank(
     schedule: BankSchedule | None = None,
     fast_path: bool = True,
     lane: str | None = None,
+    combine: np.ndarray | None = None,
+    n_real: int | None = None,
 ) -> jnp.ndarray:
     """Apply a B-filter bank to a C-channel signal with the scheduled
     bank kernel (one `pallas_call` per occupancy tile group).
@@ -485,6 +500,8 @@ def blmac_fir_bank(
     `FilterBankEngine` does this once at construction.  ``lane``
     selects the execution lane (see `LANES`; compiled lanes skip the
     fast path — specialized programs are an interpret-era optimization).
+    ``combine``/``n_real`` execute a CSE-optimized shared-row bank (see
+    `bank_schedule_apply`); the result then has ``n_real`` rows.
     """
     x = jnp.asarray(x)
     squeeze = x.ndim == 1
@@ -497,6 +514,7 @@ def blmac_fir_bank(
     if (
         fast_path
         and schedule is None
+        and combine is None
         and n_filters <= FAST_PATH_MAX
         and lane in (None, "interpret")
     ):
@@ -520,7 +538,8 @@ def blmac_fir_bank(
     if schedule is None:
         schedule = plan_bank_schedule(packed, bank_tile, merge)
     frames, n_out = frame_signal_batch(x.astype(jnp.int32), taps, tile)
-    y = bank_schedule_apply(frames, schedule, taps, tile, interpret, lane=lane)
+    y = bank_schedule_apply(frames, schedule, taps, tile, interpret, lane=lane,
+                            combine=combine, n_real=n_real)
     # one combined slice: separate [:, :, :n_out] then [:, 0, :] would copy
     # the full (B, C, signal) buffer twice on the host
     return y[:, 0, :n_out] if squeeze else y[:, :, :n_out]
@@ -534,6 +553,8 @@ def bank_schedule_apply(
     interpret: bool,
     device_groups: list | None = None,
     lane: str | None = None,
+    combine: jnp.ndarray | None = None,
+    n_real: int | None = None,
 ) -> jnp.ndarray:
     """Run every tile group of a `BankSchedule` over pre-framed signal and
     reassemble rows in the caller's filter order → (B, C, n_tiles*tile).
@@ -543,8 +564,16 @@ def bank_schedule_apply(
     bank every chunk.  ``lane`` selects the execution lane (see `LANES`);
     None keeps the legacy behaviour — a pallas_call honouring the
     ``interpret`` flag — while ``"xla"`` routes to the fused compiled
-    lowering `_bank_call_xla` (bit-exact against every other lane)."""
+    lowering `_bank_call_xla` (bit-exact against every other lane).
+
+    ``combine``/``n_real`` execute a CSE-optimized program's shared-row
+    layout (`repro.compiler.optimize`): rows past ``n_real`` are shared
+    partial sums, folded back after reassembly as one small int32 GEMM
+    plus an add — on the single-group xla path the GEMM fuses into the
+    lowered program itself.  The result then has ``n_real`` rows."""
     n_chan, n_tiles, _ = frames.shape
+    if combine is not None:
+        combine = jnp.asarray(np.asarray(combine, np.int32))
     if lane is not None and lane != "xla":
         interpret = _lane_interpret(lane, interpret)
     if len(schedule.groups) == 1 and lane == "xla":
@@ -558,14 +587,17 @@ def bank_schedule_apply(
         # padded, occupancy-sorted row layout.
         g = schedule.groups[0]
         if not g.sel_layers:
-            return jnp.zeros((len(schedule.inv), n_chan, n_tiles * tile),
-                             jnp.int32)
+            rows = len(schedule.inv) if combine is None else n_real
+            return jnp.zeros((rows, n_chan, n_tiles * tile), jnp.int32)
         op = (
             device_groups[0]
             if device_groups is not None
             else jnp.asarray(g.packed.view(np.int32))
         )[schedule.inv]
-        y = _bank_call_xla(frames, op, taps, g.schedule, g.tail_shift, tile)
+        y = _bank_call_xla(
+            frames, op, taps, g.schedule, g.tail_shift, tile,
+            combine=combine, n_real=n_real,
+        )
         return y.reshape(y.shape[0], n_chan, -1)
     parts = []
     for gi, g in enumerate(schedule.groups):
@@ -591,7 +623,21 @@ def bank_schedule_apply(
             )  # (rows, C, n_tiles, tile)
         parts.append(y.reshape(rows, n_chan, -1))
     y = jnp.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
-    return y[schedule.inv]  # drop pad rows, restore caller's filter order
+    y = y[schedule.inv]  # drop pad rows, restore caller's filter order
+    if combine is not None:
+        y = _combine_shared(y, combine, n_real)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("n_real",))
+def _combine_shared(y: jnp.ndarray, combine: jnp.ndarray, n_real: int):
+    """Fold shared partial-sum rows (``y[n_real:]``) back into their
+    consumers: one (n_real, n_shared) int32 GEMM plus an add.  Exact in
+    the mod-2**32 ring on every lane; the combined values are the parent
+    program's outputs, which fit int32 by the pack-time §2.1 bound."""
+    return y[:n_real] + jnp.tensordot(
+        combine, y[n_real:], axes=1, preferred_element_type=jnp.int32
+    )
 
 
 def blmac_fir_dynamic(

@@ -156,6 +156,13 @@ def autotune_bank_dispatch(
     stay in the sweep, so the winning ``plan.lane`` answers "does the
     compiled lowering pay here?".  The default (``False``) keeps the
     historic interpret-only sweep byte-for-byte.
+
+    An `repro.compiler.OptimizedProgram` (CSE pass output) is swept over
+    its shared-row layout — `predict_scheduled_us` prices the combine
+    stage — AND compared against autotuning its parent: when the parent
+    wins, the returned plan carries ``cse="declined"`` with the PARENT's
+    schedule, and the engine executes the parent (bit-identical
+    outputs); otherwise ``cse="optimized"``.
     """
     program = _resolve_program(bank, taps)
     lanes: "tuple[str, ...]" = ("interpret",)
@@ -171,6 +178,23 @@ def autotune_bank_dispatch(
         return _AUTOTUNE_CACHE[key]
     _COMPILER_STATS["autotune"].miss()
     result = _autotune(program, channels, tile, chunk_hint, lanes=lanes)
+    if program.combine is not None:
+        import dataclasses
+
+        parent_plan, parent_sched = autotune_bank_dispatch(
+            program.parent, channels=channels, tile=tile,
+            chunk_hint=chunk_hint, interpret=interpret, compiled=compiled,
+        )
+        opt_plan, opt_sched = result
+        if parent_plan.predicted_us < opt_plan.predicted_us:
+            result = (
+                dataclasses.replace(parent_plan, cse="declined"),
+                parent_sched,
+            )
+        else:
+            result = (
+                dataclasses.replace(opt_plan, cse="optimized"), opt_sched
+            )
     _AUTOTUNE_CACHE[key] = result
     while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
         _AUTOTUNE_CACHE.popitem(last=False)
@@ -268,6 +292,13 @@ def autotune_sharded_dispatch(
     `autotune_bank_dispatch` — per-shard plans then carry the winning
     ``lane`` and the host-dispatch costs are priced with that lane's
     calibration.
+
+    An `OptimizedProgram` plans its augmented shared-row bank (via
+    ``.bank``; the host folds ``combine`` after the gather, priced with
+    `predict_combine_us`) and competes against planning its parent —
+    the winner's plan carries ``cse="optimized"`` or ``cse="declined"``
+    so callers know which program's rows the partition/schedules
+    describe.
     """
     program = _resolve_program(bank, taps)
     n_bank, n_data = int(mesh_shape[0]), int(mesh_shape[1])
@@ -283,14 +314,56 @@ def autotune_sharded_dispatch(
         _COMPILER_STATS["autotune"].hit()
         return _AUTOTUNE_CACHE[key]
     _COMPILER_STATS["autotune"].miss()
-    result = _autotune_sharded(
-        program, channels, n_bank, n_data, tile, chunk_hint,
-        force_shards, force_data, lanes=lanes,
-    )
+    if program.combine is not None:
+        result = _sharded_cse_compare(
+            program, channels, n_bank, n_data, tile, chunk_hint,
+            force_shards, force_data, lanes,
+        )
+    else:
+        result = _autotune_sharded(
+            program, channels, n_bank, n_data, tile, chunk_hint,
+            force_shards, force_data, lanes=lanes,
+        )
     _AUTOTUNE_CACHE[key] = result
     while len(_AUTOTUNE_CACHE) > _AUTOTUNE_CACHE_MAX:
         _AUTOTUNE_CACHE.popitem(last=False)
     return result
+
+
+def _sharded_cse_compare(program, channels, n_bank, n_data, tile,
+                         chunk_hint, force_shards, force_data, lanes):
+    """Sharded plan for an `OptimizedProgram`: plan the augmented bank
+    (+ the host-side combine fold after the gather) against planning
+    the parent outright, and tag the winner's ``cse`` field."""
+    import dataclasses
+
+    from ..core.costmodel import predict_combine_us
+
+    opt_plan, opt_part, opt_scheds = _autotune_sharded(
+        program.bank, channels, n_bank, n_data, tile, chunk_hint,
+        force_shards, force_data, lanes=lanes,
+    )
+    # the fold is host numpy on the gathered result — reference-constant
+    # pricing, like the host dispatch terms above
+    t = opt_plan.shard_plans[0].tile
+    combine_us = predict_combine_us(
+        program.n_real, program.n_shared, channels,
+        max(1, -(-chunk_hint // t)), t,
+    )
+    opt_plan = dataclasses.replace(
+        opt_plan, predicted_us=opt_plan.predicted_us + combine_us,
+        cse="optimized",
+    )
+    parent_plan, parent_part, parent_scheds = _autotune_sharded(
+        program.parent, channels, n_bank, n_data, tile, chunk_hint,
+        force_shards, force_data, lanes=lanes,
+    )
+    if parent_plan.predicted_us < opt_plan.predicted_us:
+        return (
+            dataclasses.replace(parent_plan, cse="declined"),
+            parent_part, parent_scheds,
+        )
+    return opt_plan, opt_part, opt_scheds
 
 
 def _shard_candidates(n_bank: int, n_filters: int) -> "list[int]":

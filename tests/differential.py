@@ -53,6 +53,7 @@ from repro.filters import FilterBankEngine, sweep_bank, sweep_specs
 __all__ = [
     "DifferentialReport",
     "chaos_check",
+    "cse_check",
     "five_way_check",
     "four_way_check",
     "random_type1_bank",
@@ -301,6 +302,108 @@ def five_way_check(
         scalar_rejected=rejected,
         sharded_mesh=(seng.n_bank_shards, seng.n_data),
     )
+
+
+def cse_check(
+    qbank: np.ndarray | None = None,
+    x: np.ndarray | None = None,
+    *,
+    program: BlmacProgram | None = None,
+    n_out: int = 48,
+    tile: int = 256,
+    seed: int = 0,
+    interpret: bool | None = None,
+    mesh=None,
+    level=2,
+    max_shared: int | None = None,
+) -> dict:
+    """CSE leg of the harness: optimize a compiled bank with
+    `repro.compiler.cse_pass` and assert the optimized program is
+    bit-exact against the PARENT's oracle on every backend —
+    weight-level (``effective_qbank``), scheduled (interpret AND the
+    fused xla lane with its in-kernel combine GEMM), specialized (small
+    banks), vmachine (widened-spec augmented rows + exact int64 fold),
+    sharded (augmented rows across the mesh, host fold after the
+    gather), and both `FilterBankEngine` modes — ``mode="auto"`` also
+    exercising the autotuner's optimize-vs-decline verdict.
+
+    Also asserts the pass's accounting: the optimized program never
+    increases total pulses or §3.3 adds, and its §4 cycle prediction
+    equals its augmented bank's cycles plus one per combine use.
+    Returns a small report dict (counts, adds, the auto verdict).
+    """
+    from repro.compiler import cse_pass
+
+    if program is None:
+        if qbank is None:
+            raise ValueError("cse_check needs qbank or program")
+        program = compile_bank(np.atleast_2d(np.asarray(qbank, np.int64)))
+    opt = cse_pass(program, level, max_shared=max_shared)
+    taps = program.taps
+    rng = np.random.default_rng(seed)
+    if x is None:
+        lim = 1 << (program.spec.sample_bits - 1)
+        x = rng.integers(-lim, lim, taps - 1 + n_out)
+    x = np.asarray(x, np.int64)
+    oracle = lower(program, "oracle")(x)[:, 0, :]
+
+    report = {
+        "n_real": program.n_filters,
+        "n_shared": 0,
+        "adds_parent": program.total_adds(),
+        "adds_optimized": opt.total_adds(),
+        "auto_cse": "",
+    }
+    if opt is program:  # nothing profitable: the pass declined entirely
+        return report
+    report["n_shared"] = opt.n_shared
+
+    # -- accounting ----------------------------------------------------------
+    assert np.array_equal(opt.effective_qbank(), program.qbank), \
+        "cse: effective_qbank != parent qbank"
+    assert int(opt.pulse_counts.sum()) <= int(program.pulse_counts.sum()), \
+        "cse: optimized bank has MORE pulses than the parent"
+    assert opt.total_adds() <= program.total_adds(), \
+        "cse: optimized program has MORE §3.3 adds than the parent"
+    wspec = MachineSpec(taps=taps, coeff_bits=opt.n_layers + 1)
+    assert np.array_equal(
+        opt.machine_cycles(),
+        opt.bank.machine_cycles(wspec)[: opt.n_real] + opt.use_counts,
+    ), "cse: cycle prediction != augmented cycles + combine uses"
+
+    # -- execution legs ------------------------------------------------------
+    for leg, kw in (
+        ("oracle", {}),
+        ("scheduled", dict(tile=tile, interpret=interpret)),
+        ("scheduled", dict(tile=tile, interpret=interpret, lane="xla")),
+        ("vmachine", {}),
+        ("sharded", dict(mesh=mesh, interpret=interpret)),
+    ):
+        y = np.asarray(lower(opt, leg, **kw)(x))[:, 0, :]
+        assert np.array_equal(y.astype(np.int64), oracle), \
+            f"cse: optimized {leg} {kw} != parent oracle"
+    if opt.n_filters <= 12:  # one compile per augmented row: small banks
+        y = np.asarray(
+            lower(opt, "specialized", interpret=interpret)(x)
+        )[:, 0, :]
+        assert np.array_equal(y.astype(np.int64), oracle), \
+            "cse: optimized specialized != parent oracle"
+
+    # -- engines -------------------------------------------------------------
+    eng = FilterBankEngine(
+        opt, channels=1, tile=tile, mode="packed", interpret=interpret
+    )
+    assert eng.n_filters == opt.out_filters
+    y = eng.push(x)[:, 0, :]
+    assert np.array_equal(np.asarray(y, np.int64), oracle), \
+        "cse: packed FilterBankEngine != parent oracle"
+    auto = FilterBankEngine(opt, channels=1, mode="auto", interpret=interpret)
+    assert auto.dispatch_plan.cse in ("optimized", "declined")
+    y = auto.push(x)[:, 0, :]
+    assert np.array_equal(np.asarray(y, np.int64), oracle), \
+        "cse: auto FilterBankEngine != parent oracle"
+    report["auto_cse"] = auto.dispatch_plan.cse
+    return report
 
 
 def chaos_check(

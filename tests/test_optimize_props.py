@@ -1,0 +1,39 @@
+"""Hypothesis property tests for the CSE pass (`repro.compiler.optimize`).
+
+Separate module so the deterministic tests in `test_optimize.py` still
+run where hypothesis is not installed (the `test_csd.py` idiom — CI
+installs it via requirements-dev.txt).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from tests.test_optimize import roundtrip_properties  # noqa: E402
+
+
+@given(
+    st.lists(
+        st.lists(st.integers(-2**15 + 1, 2**15 - 1),
+                 min_size=8, max_size=8),
+        min_size=1, max_size=8,
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_cse_property_decode_roundtrip_and_pulse_budget(halves):
+    """cse_pass output decodes to the identical quantized bank
+    (csd_decode round-trip through the packed augmented trits plus the
+    combine fold) and never increases the total pulse count, over
+    random type-I banks."""
+    h = np.asarray(halves, np.int64)
+    roundtrip_properties(np.concatenate([h, h[:, :-1][:, ::-1]], axis=1))
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 6))
+@settings(max_examples=25, deadline=None)
+def test_cse_property_on_seeded_random_banks(seed, n_filters):
+    from tests.differential import random_type1_bank
+
+    roundtrip_properties(random_type1_bank(n_filters, 31, seed=seed))
